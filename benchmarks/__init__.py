@@ -1,0 +1,6 @@
+"""Benchmark harness: one function per paper table/figure.
+
+``python -m benchmarks.run`` executes every benchmark, prints
+``name,us_per_call,derived`` CSV rows, and writes the per-figure data files
+under ``artifacts/benchmarks/``.
+"""

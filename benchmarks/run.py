@@ -1,0 +1,79 @@
+"""Run every benchmark (one per paper table/figure + system benches).
+
+Prints ``name,us_per_call,derived`` CSV rows and writes per-figure data to
+artifacts/benchmarks/<name>.csv.
+"""
+
+from __future__ import annotations
+
+import csv
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "benchmarks"
+
+BENCHES = [
+    # (name, module attr)  — paper figure/table mapping in the docstrings
+    ("fig8_collectives", "paper_figures"),
+    ("fig9_chunked_breakdown", "paper_figures"),
+    ("fig11_speculative", "paper_figures"),
+    ("fig12_moe_parallelism", "paper_figures"),
+    ("fig13_arch_scaling", "paper_figures"),
+    ("fig14_memory_capacity", "paper_figures"),
+    ("fig15_platform_reqs", "paper_figures"),
+    ("fig16_hw_scaling", "paper_figures"),
+    ("fig17_platform_compare", "paper_figures"),
+    ("fig18_hbd", "paper_figures"),
+    ("fig19_microarch", "paper_figures"),
+    ("fig20_super_llm", "paper_figures"),
+    ("validation_hlo", "system_benches"),
+    ("roofline_table", "system_benches"),
+    ("serving_engine", "system_benches"),
+    ("spec_decode_sys", "system_benches"),
+    ("disagg_planner", "system_benches"),
+    ("kernel_micro", "system_benches"),
+]
+
+
+def _write_csv(name: str, rows: list[dict]) -> None:
+    if not rows:
+        return
+    ART.mkdir(parents=True, exist_ok=True)
+    cols: list[str] = []
+    for r in rows:
+        for k in r:
+            if k not in cols:
+                cols.append(k)
+    with open(ART / f"{name}.csv", "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=cols)
+        w.writeheader()
+        w.writerows(rows)
+
+
+def main() -> None:
+    import importlib
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, module in BENCHES:
+        mod = importlib.import_module(f"benchmarks.{module}")
+        fn = getattr(mod, name)
+        t0 = time.time()
+        try:
+            rows, derived = fn()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},ERROR,\"{type(e).__name__}: {e}\"")
+            continue
+        us = (time.time() - t0) * 1e6
+        _write_csv(name, rows)
+        print(f"{name},{us:.0f},\"{derived}\"")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

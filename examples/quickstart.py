@@ -1,0 +1,59 @@
+"""Quickstart: the GenZ analytical API in ~30 lines (paper Fig. 2 flow).
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Estimates TTFT / TPOT / throughput / energy for LLaMA3-70B chat serving on
+an HGX-H100 node, sweeps tensor parallelism, and prints the §VI platform
+requirements for GPT-4-class models.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import GenZ, Workload, paper_model
+from repro.core.requirements import platform_requirements
+from repro.core.usecases import use_case
+
+
+def main() -> None:
+    g = GenZ.hgx_h100(8).with_opt(weight_dtype="fp8", act_dtype="fp8",
+                                  kv_dtype="fp8")
+
+    print("== llama3-70b, chat (3000 in / 1000 out), batch 16 ==")
+    for tp in (2, 4, 8):
+        rep = g.estimate("llama3-70b", use_case="chat", batch=16,
+                         parallelism=dict(tp=tp))
+        fits = "fits" if rep.decode.memory.fits else "OOM "
+        print(f"  TP={tp}:  TTFT {rep.ttft*1e3:7.1f} ms | "
+              f"TPOT {rep.tpot*1e3:6.2f} ms | "
+              f"{rep.throughput:7.0f} tok/s | "
+              f"{rep.energy_per_token:5.2f} J/tok | {fits}")
+
+    print("\n== decode runtime breakdown (TP=8) ==")
+    dec = g.decode("llama3-70b", use_case="chat", batch=16,
+                   parallelism=dict(tp=8))
+    for part, t in dec.timing.breakdown().items():
+        print(f"  {part:12s} {t*1e3:7.2f} ms")
+
+    print("\n== §VI platform requirements, QA+RAG use case ==")
+    for name in ("llama3-8b", "llama3-70b", "gpt3-175b", "gpt4-1.8t"):
+        req = platform_requirements(paper_model(name), use_case("qa_rag", 1))
+        print(f"  {name:12s} {req.mem_capacity_gb:8.0f} GB | "
+              f"{req.compute_pflops:6.1f} PFLOPS | "
+              f"{req.mem_bw_tbps:5.1f} TB/s")
+
+    print("\n== chunked prefill (paper §IV-A), llama3-70b ==")
+    for dec_b in (1, 32, 128):
+        r = g.chunked("llama3-70b", chunk=512, decode_batch=dec_b,
+                      workload=Workload(batch=dec_b, tau_p=4096, tau_d=1024),
+                      parallelism=dict(tp=8))
+        br = r.timing.breakdown()
+        print(f"  decode_batch={dec_b:3d}: iter {r.time*1e3:6.2f} ms "
+              f"(linear {br['linear']*1e3:5.2f}, "
+              f"attn {br['attention']*1e3:5.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Fault-tolerant training demo: train a small model, inject a node failure
+mid-run, restart from the newest committed checkpoint, and verify the final
+weights are bit-identical to an uninterrupted run.
+
+    PYTHONPATH=src python examples/train_faulty.py [--steps 40]
+"""
+
+import argparse
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.data.pipeline import DataConfig
+from repro.models import build_model
+from repro.training.fault import FailureInjector, run_with_restarts
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--fail-at", type=int, default=25)
+    args = ap.parse_args()
+
+    spec = registry.get_reduced("deepseek-7b").scaled(vocab=128)
+    model = build_model(spec, mesh=None, param_dtype=jnp.float32,
+                        compute_dtype=jnp.float32)
+    data_cfg = DataConfig(vocab=128, seq_len=64, global_batch=8, seed=0)
+
+    def trainer(d, injector=None):
+        return Trainer(
+            model, data_cfg,
+            TrainConfig(checkpoint_every=10, checkpoint_dir=d,
+                        optimizer=AdamWConfig(lr=3e-3, warmup_steps=5,
+                                              total_steps=args.steps)),
+            rng=jax.random.key(0), failure_injector=injector)
+
+    with tempfile.TemporaryDirectory() as d_ref, \
+            tempfile.TemporaryDirectory() as d_ft:
+        print("== reference run (no failures) ==")
+        ref = trainer(d_ref)
+        ref.run(0, args.steps,
+                callback=lambda s, l: s % 10 == 0 and print(
+                    f"  step {s:3d} loss {l:.4f}"))
+
+        print(f"\n== fault-tolerant run (failure injected at step "
+              f"{args.fail_at}) ==")
+        injector = FailureInjector(fail_at_steps=(args.fail_at,))
+
+        def make(attempt):
+            if attempt:
+                print(f"  [supervisor] restart #{attempt}: restoring from "
+                      "latest committed checkpoint, replaying data stream")
+            return trainer(d_ft, injector)
+
+        tr = run_with_restarts(
+            make, total_steps=args.steps,
+            on_restart=lambda a, e: print(f"  [supervisor] caught: {e}"))
+
+        diffs = [float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+            jax.tree.leaves(ref.params), jax.tree.leaves(tr.params))]
+        print(f"\nmax param divergence vs uninterrupted run: {max(diffs):.2e}")
+        print("straggler monitor flagged:", tr.monitor.flagged)
+        assert max(diffs) < 1e-5, "restart must be deterministic"
+        print("OK: crash-restart run converged to identical weights")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""GenZ-JAX: analytical AI-platform modeling + an executable distributed
+LLM inference/training framework.
+
+Reproduction of "Demystifying AI Platform Design for Distributed Inference of
+Next-Generation LLM models" (GenZ).  Two coupled halves:
+
+  * :mod:`repro.core`     — the paper's analytical model (profiler, NPU and
+    platform characterizers, roofline Eq. 1, energy Eq. 2, §VI requirement
+    estimation, §IV/§VII case-study machinery).
+  * :mod:`repro.models` / :mod:`repro.serving` / :mod:`repro.training` /
+    :mod:`repro.launch` — a real JAX framework (model zoo for the 10 assigned
+    architectures, pjit/shard_map distribution over a (pod, data, model)
+    mesh, serving engine with chunked prefill / speculative decoding, fault-
+    tolerant training loop) whose compiled HLO *cross-validates* the
+    analytical model (our stand-in for the paper's real-hardware validation).
+"""
+
+__version__ = "1.0.0"

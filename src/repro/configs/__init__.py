@@ -1,0 +1,12 @@
+"""Assigned-architecture configs (``--arch <id>``) + input-shape sets.
+
+Each module defines ``SPEC`` (the exact published configuration) and
+``REDUCED`` (a small same-family config for CPU smoke tests).  The registry
+maps the hyphenated public ids to them and pairs every architecture with its
+input-shape set (train_4k / prefill_32k / decode_32k / long_500k).
+"""
+
+from . import registry
+from .registry import ARCH_IDS, get_reduced, get_spec, shapes_for
+
+__all__ = ["registry", "ARCH_IDS", "get_spec", "get_reduced", "shapes_for"]

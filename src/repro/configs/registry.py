@@ -1,0 +1,69 @@
+"""Architecture registry: ``--arch <id>`` -> ModelSpec (+ reduced config).
+
+The ten assigned architectures, each paired with its input-shape set (see
+``repro.configs.shapes``), plus the paper's own Table-IV models for the
+analytical case studies.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from ..core.modelspec import PAPER_MODELS, ModelSpec
+from .shapes import SHAPES, ShapeSpec, applicable, applicable_shapes
+
+_ARCH_MODULES: dict[str, str] = {
+    "qwen1.5-0.5b": ".qwen15_05b",
+    "deepseek-7b": ".deepseek_7b",
+    "minitron-8b": ".minitron_8b",
+    "yi-34b": ".yi_34b",
+    "hubert-xlarge": ".hubert_xlarge",
+    "deepseek-moe-16b": ".deepseek_moe_16b",
+    "granite-moe-3b-a800m": ".granite_moe_3b",
+    "rwkv6-3b": ".rwkv6_3b",
+    "jamba-v0.1-52b": ".jamba_52b",
+    "pixtral-12b": ".pixtral_12b",
+    # bonus beyond the assigned ten: exercises sliding-window attention
+    "mistral-7b-swa": ".mistral_7b_swa",
+}
+
+#: the ten assigned architectures (the dry-run/roofline matrix)
+ASSIGNED_IDS: tuple[str, ...] = tuple(_ARCH_MODULES)[:10]
+ARCH_IDS: tuple[str, ...] = tuple(_ARCH_MODULES)
+
+
+def _module(arch_id: str):
+    try:
+        rel = _ARCH_MODULES[arch_id]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; assigned archs: {sorted(_ARCH_MODULES)}"
+            f"; paper models: {sorted(PAPER_MODELS)}") from None
+    return importlib.import_module(rel, package=__package__)
+
+
+def get_spec(arch_id: str) -> ModelSpec:
+    """Full published config (exercised only via the dry-run)."""
+    if arch_id in PAPER_MODELS:
+        return PAPER_MODELS[arch_id]
+    return _module(arch_id).SPEC
+
+
+def get_reduced(arch_id: str) -> ModelSpec:
+    """Reduced same-family config for CPU smoke tests."""
+    return _module(arch_id).REDUCED
+
+
+def shapes_for(arch_id: str) -> list[ShapeSpec]:
+    return applicable_shapes(get_spec(arch_id))
+
+
+def all_cells() -> list[tuple[str, ShapeSpec, bool, str]]:
+    """Every (arch x shape) cell with its applicability verdict."""
+    out = []
+    for arch in ARCH_IDS:
+        spec = get_spec(arch)
+        for shape in SHAPES.values():
+            ok, why = applicable(spec, shape)
+            out.append((arch, shape, ok, why))
+    return out

@@ -1,0 +1,56 @@
+"""Input-shape sets for the assigned LM-family architectures.
+
+  train_4k     seq_len=4096    global_batch=256   (training: train_step)
+  prefill_32k  seq_len=32768   global_batch=32    (inference prefill)
+  decode_32k   seq_len=32768   global_batch=128   (inference decode: one new
+                                                   token against a KV cache of
+                                                   seq_len -> serve_step)
+  long_500k    seq_len=524288  global_batch=1     (long-context decode; needs
+                                                   sub-quadratic attention)
+
+Applicability rules (recorded in DESIGN.md §Arch-applicability):
+  * encoder-only models (HuBERT) have no autoregressive decode -> decode
+    shapes are skipped;
+  * ``long_500k`` requires sub-quadratic attention -> run only for SSM /
+    hybrid / sliding-window models, skip for pure full-attention stacks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..core.modelspec import ModelSpec
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(spec: ModelSpec, shape: ShapeSpec) -> tuple[bool, str]:
+    """-> (runs?, reason-if-skipped)."""
+    if shape.kind == "decode" and not spec.decoder:
+        return False, "encoder-only architecture has no decode step"
+    if shape.name == "long_500k" and not spec.supports_long_context:
+        return False, ("pure full-attention architecture: 500k decode needs "
+                       "sub-quadratic attention")
+    return True, ""
+
+
+def applicable_shapes(spec: ModelSpec) -> list[ShapeSpec]:
+    return [s for s in SHAPES.values() if applicable(spec, s)[0]]

@@ -1,0 +1,29 @@
+"""GenZ analytical core: the paper's primary contribution.
+
+Layout (paper Fig. 2):
+  - :mod:`repro.core.modelspec`  — model profiler inputs (Table IV + assigned)
+  - :mod:`repro.core.profiler`   — operator graphs per stage/parallelism
+  - :mod:`repro.core.hardware`   — NPU characterizer (Eq. 1 inputs)
+  - :mod:`repro.core.network`    — platform characterizer + collectives
+  - :mod:`repro.core.roofline`   — Eq. (1) timing + Eq. (2) energy
+  - :mod:`repro.core.stages`     — prefill / decode / chunked / speculative
+  - :mod:`repro.core.requirements` — §VI platform requirement estimation
+  - :mod:`repro.core.genz`       — user-facing facade
+"""
+
+from .genz import GenZ
+from .hardware import NPU, MemoryLevel, PowerModel, get_npu
+from .modelspec import AttnSpec, ModelSpec, MoESpec, PAPER_MODELS, SSMSpec, paper_model
+from .network import Collective, NetworkDim, Platform, collective_time, make_platform
+from .operators import Operator, Optimizations
+from .parallelism import ParallelismConfig
+from .stages import InferenceReport, StageResult, Workload
+from .usecases import USE_CASES, use_case
+
+__all__ = [
+    "GenZ", "NPU", "MemoryLevel", "PowerModel", "get_npu", "AttnSpec",
+    "ModelSpec", "MoESpec", "SSMSpec", "PAPER_MODELS", "paper_model",
+    "Collective", "NetworkDim", "Platform", "collective_time",
+    "make_platform", "Operator", "Optimizations", "ParallelismConfig",
+    "InferenceReport", "StageResult", "Workload", "USE_CASES", "use_case",
+]

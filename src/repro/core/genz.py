@@ -1,0 +1,134 @@
+"""GenZ facade: the one-stop API tying profiler + NPU + platform together
+(paper Fig. 2).
+
+    >>> from repro.core import genz
+    >>> g = genz.GenZ.hgx_h100(8)
+    >>> rep = g.estimate("llama3-70b", use_case="chat", batch=16,
+    ...                  parallelism=dict(tp=8))
+    >>> rep.ttft, rep.tpot, rep.throughput
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from . import hardware, network, usecases
+from .hardware import GB, TB, NPU, PowerModel
+from .modelspec import PAPER_MODELS, ModelSpec
+from .network import NetworkDim, Platform
+from .operators import Optimizations
+from .parallelism import ParallelismConfig
+from .stages import (InferenceReport, StageResult, Workload, chunked, decode,
+                     estimate, prefill, speculative_decode)
+
+
+def _as_spec(model: ModelSpec | str) -> ModelSpec:
+    if isinstance(model, ModelSpec):
+        return model
+    if model in PAPER_MODELS:
+        return PAPER_MODELS[model]
+    # fall back to the assigned-architecture registry
+    from ..configs import registry
+    return registry.get_spec(model)
+
+
+def _as_par(p) -> ParallelismConfig:
+    if isinstance(p, ParallelismConfig):
+        return p
+    if isinstance(p, dict):
+        return ParallelismConfig(**p)
+    if p is None:
+        return ParallelismConfig()
+    raise TypeError(type(p))
+
+
+def _as_workload(wl, use_case: str | None, batch: int) -> Workload:
+    if isinstance(wl, Workload):
+        return dataclasses.replace(wl, batch=batch)
+    if use_case is not None:
+        return usecases.use_case(use_case, batch=batch)
+    raise ValueError("provide workload= or use_case=")
+
+
+@dataclass(frozen=True)
+class GenZ:
+    """Analytical LLM-inference platform analyzer."""
+
+    platform: Platform
+    opt: Optimizations = Optimizations()
+
+    # -- constructors --------------------------------------------------------
+    @staticmethod
+    def hgx_h100(n_gpus: int = 8, eff: float | None = None) -> "GenZ":
+        npu = hardware.h100_sxm()
+        if eff is not None:
+            npu = dataclasses.replace(npu, eff_compute=eff)
+        dims = (NetworkDim("nvlink", n_gpus, 450 * GB, 0.5e-6,
+                           efficiency=0.75, topology="switch"),)
+        return GenZ(Platform(npu=npu, dims=dims,
+                             power=PowerModel(10.2e3 * n_gpus / 8),
+                             name=f"hgx-h100x{n_gpus}"))
+
+    @staticmethod
+    def tpu_v5e_pod(data: int = 16, model: int = 16, pods: int = 1) -> "GenZ":
+        """The production mesh of this repo: (pod, data, model) over v5e
+        chips with ~50 GB/s ICI links and a slower inter-pod DCN."""
+        npu = hardware.tpu_v5e()
+        dims = [NetworkDim("ici-model", model, 50 * GB, 1e-6, topology="ring"),
+                NetworkDim("ici-data", data, 50 * GB, 1e-6, topology="ring")]
+        if pods > 1:
+            dims.append(NetworkDim("dcn-pod", pods, 25 * GB, 10e-6,
+                                   topology="switch"))
+        return GenZ(Platform(npu=npu, dims=tuple(dims),
+                             power=PowerModel(200.0 * data * model * pods),
+                             name=f"v5e-{pods}x{data}x{model}"))
+
+    @staticmethod
+    def gb200_node(n: int = 8) -> "GenZ":
+        npu = hardware.gb200_like()
+        dims = (NetworkDim("nvl", n, 900 * GB, 0.5e-6, topology="switch"),
+                NetworkDim("scaleout", 4, 900 * GB, 0.5e-6, topology="switch"))
+        return GenZ(Platform(npu=npu, dims=dims, power=PowerModel(57.2e3),
+                             name=f"gb200x{n}"))
+
+    def with_opt(self, **kw) -> "GenZ":
+        return dataclasses.replace(self, opt=dataclasses.replace(self.opt, **kw))
+
+    def with_platform(self, platform: Platform) -> "GenZ":
+        return dataclasses.replace(self, platform=platform)
+
+    # -- estimation ----------------------------------------------------------
+    def estimate(self, model: ModelSpec | str, *, use_case: str | None = None,
+                 workload: Workload | None = None, batch: int = 1,
+                 parallelism=None) -> InferenceReport:
+        spec = _as_spec(model)
+        par = _as_par(parallelism)
+        wl = _as_workload(workload, use_case, batch)
+        return estimate(spec, self.platform, par, self.opt, wl)
+
+    def prefill(self, model, *, workload=None, use_case=None, batch=1,
+                parallelism=None) -> StageResult:
+        return prefill(_as_spec(model), self.platform, _as_par(parallelism),
+                       self.opt, _as_workload(workload, use_case, batch))
+
+    def decode(self, model, *, workload=None, use_case=None, batch=1,
+               parallelism=None, context=None) -> StageResult:
+        return decode(_as_spec(model), self.platform, _as_par(parallelism),
+                      self.opt, _as_workload(workload, use_case, batch),
+                      context=context)
+
+    def chunked(self, model, *, chunk: int, decode_batch: int, workload=None,
+                use_case=None, batch=1, parallelism=None,
+                decode_ctx=None) -> StageResult:
+        return chunked(_as_spec(model), self.platform, _as_par(parallelism),
+                       self.opt, _as_workload(workload, use_case, batch),
+                       chunk, decode_batch, decode_ctx)
+
+    def speculative(self, target, draft, *, n: int, gamma: float,
+                    workload=None, use_case=None, batch=1,
+                    parallelism=None) -> StageResult:
+        return speculative_decode(
+            _as_spec(target), _as_spec(draft), self.platform,
+            _as_par(parallelism), self.opt,
+            _as_workload(workload, use_case, batch), n, gamma)

@@ -1,0 +1,20 @@
+"""TPU Pallas kernels for the compute hot-spots, with jnp fallbacks.
+
+Layout (one module per kernel + shared dispatch/oracle):
+
+  flash_attention.py : blockwise causal/bidirectional attention (MXU-tiled,
+                       VMEM-resident online softmax)
+  decode_attention.py: flash-decode — one query vs a long KV cache, KV-
+                       partitioned partial softmax + combine
+  ssm_scan.py        : RWKV-6 chunked linear-attention scan
+  moe_gemm.py        : per-expert batched GEMM
+  ops.py             : public dispatch API (direct / flash / pallas)
+  ref.py             : pure-jnp oracles every kernel is validated against
+  flash_jnp.py       : scan-based blockwise attention with custom VJP (the
+                       CPU/dry-run path; same block structure as the Pallas
+                       kernel)
+
+On this CPU container the Pallas kernels execute in ``interpret=True`` mode
+(see tests/test_kernels_*); on TPU the same ``pl.pallas_call`` lowers to
+Mosaic.
+"""

@@ -1,0 +1,121 @@
+"""Pallas TPU flash-decode kernel: one query token against a long KV cache.
+
+The decode stage is memory-bound (paper §II-B): the whole cache streams
+from HBM once per token.  This kernel's job is to hit that streaming bound:
+
+  grid = (B * Hkv, n_kv_blocks) — the KV cache is the only large operand;
+  each grid step streams one (block_kv, D) K and V tile into VMEM, updates
+  the online-softmax partials for all G query heads (VMEM scratch), and the
+  final step normalizes.  q (G, D) rides along replicated per block; HBM
+  traffic = K + V exactly (the paper's BW_Req numerator).
+
+On real deployments the KV sequence may be sharded across chips (the
+``inference_seqkv`` policy); each chip then runs this kernel over its local
+blocks and the partial (m, l, acc) combine happens as a tiny all-reduce —
+the same math as the last grid step here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .flash_jnp import NEG_INF
+
+
+def _decode_kernel(aux_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, sm_scale: float, block_kv: int, n_kv: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = aux_ref[0, 0].astype(jnp.int32)
+
+    def body():
+        g, d = q_ref.shape[1], q_ref.shape[2]
+        q = q_ref[0].astype(jnp.float32)  # (G, D)
+        k = k_ref[0].astype(jnp.float32)  # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale  # (G, bk)
+        kpos = j * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_kv), 1)
+        valid = kpos < kv_len  # (1, bk)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None]) * valid
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + p.sum(axis=-1)
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    # skip blocks entirely beyond the valid prefix (no MXU work)
+    pl.when(j * block_kv < kv_len)(body)
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def pallas_decode_attention(q, k, v, *, lengths, sm_scale: float | None = None,
+                            block_kv: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """q: (B, 1, Hq, D); k,v: (B, T, Hkv, D); lengths: (B,) valid KV.
+
+    Returns (B, 1, Hq, D).  Equivalent to mha_reference with kv_len=lengths
+    and a single query at position lengths-1 (the token just inserted).
+    """
+    b, sq, hq, d = q.shape
+    assert sq == 1, "decode kernel processes one token per request"
+    _, t, hkv, _ = k.shape
+    g = hq // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    bk = min(block_kv, t)
+    pad = (-t) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nk = (t + pad) // bk
+
+    qr = q[:, 0].reshape(b, hkv, g, d).reshape(b * hkv, g, d)
+    kr = jnp.moveaxis(k, 1, 2).reshape(b * hkv, t + pad, d)
+    vr = jnp.moveaxis(v, 1, 2).reshape(b * hkv, t + pad, d)
+    aux = jnp.repeat(jnp.asarray(lengths, jnp.int32), hkv)[:, None] \
+        .astype(jnp.float32)
+
+    from jax.experimental.pallas import tpu as pltpu
+    kernel = functools.partial(_decode_kernel, sm_scale=scale, block_kv=bk,
+                               n_kv=nk)
+    o = pl.pallas_call(
+        kernel,
+        grid=(b * hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bb, j: (bb, 0)),
+            pl.BlockSpec((1, g, d), lambda bb, j: (bb, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda bb, j: (bb, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda bb, j: (bb, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda bb, j: (bb, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(aux, qr, kr, vr)
+    return o.reshape(b, hkv, g, d).reshape(b, 1, hq, d)

@@ -1,0 +1,212 @@
+"""Pallas TPU flash-attention kernel.
+
+TPU adaptation of the FlashAttention blocking (the paper's "Flash Attention
+= kernel fusion" row in Table V): the S x S score matrix never leaves VMEM.
+
+  grid = (B * Hkv, n_q_blocks, n_kv_blocks)   — kv innermost; TPU grids run
+         sequentially per core, so the online-softmax state (acc, m, l)
+         lives in VMEM scratch across the kv dimension.
+  q block   : (1, G, block_q, D)  -> reshaped (G*block_q, D) rows feed the
+              MXU as one tall GEMM against K^T (G = q-heads per kv-head, so
+              GQA costs one K/V stream for G query heads — the GQA memory
+              saving the paper models).
+  k/v block : (1, block_kv, D)
+  out block : (1, G, block_q, D), written on the last kv step.
+
+Causal masking skips fully-masked kv blocks with ``pl.when`` (no MXU work
+issued), the tile-level analogue of flash-attention's triangular schedule.
+Block sizes default to MXU-aligned (128) multiples; D (64..128) rides the
+lane dimension.
+
+Backward runs through the jnp blockwise path (same block structure,
+``flash_jnp._bwd_core``) via ``jax.custom_vjp`` — on TPU that is XLA-fused
+and keeps residuals at O(S); a Mosaic backward kernel is a further §Perf
+step, not required for serving.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .flash_jnp import NEG_INF, FlashConfig, _bwd_core
+
+
+def _flash_kernel(aux_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                  l_ref, *, sm_scale: float, block_q: int, block_kv: int,
+                  n_kv: int, causal: bool, window: int | None):
+    j = pl.program_id(2)
+    i = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = aux_ref[0, 0].astype(jnp.int32)
+    q_off = aux_ref[0, 1].astype(jnp.int32)
+
+    qpos = q_off + i * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0)
+    kpos = j * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+
+    # Tile-level causal skip: kv block strictly above the diagonal of the
+    # last query row in this q block -> no work.
+    def body():
+        g, bq, d = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
+        bk = k_ref.shape[1]
+        q = q_ref[0].reshape(g * bq, d).astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale  # (G*bq, bk)
+        valid = kpos < kv_len
+        if causal:
+            valid &= kpos <= qpos
+        if window is not None:
+            valid &= (qpos - kpos) < window
+        valid_g = jnp.tile(valid, (g, 1))
+        s = jnp.where(valid_g, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None]) * valid_g
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + p.sum(axis=-1)
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    if causal:
+        first_q = q_off + i * block_q  # scalar; kv block visible iff
+        pl.when(j * block_kv <= first_q + block_q - 1)(body)
+    else:
+        body()
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        g, bq, d = o_ref.shape[1], o_ref.shape[2], o_ref.shape[3]
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        out = (acc_ref[...] / l_safe[:, None]).reshape(g, bq, d)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def _pallas_fwd(q, k, v, aux, cfg: FlashConfig, interpret: bool):
+    """q: (BH, G, Sq, D); k/v: (BH, Skv, D); aux: (BH, 2) int32."""
+    bh, g, sq, d = q.shape
+    skv = k.shape[1]
+    bq = min(cfg.block_q, sq)
+    bk = min(cfg.block_kv, skv)
+    nq, nk = sq // bq, skv // bk
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=cfg.sm_scale, block_q=bq, block_kv=bk,
+        n_kv=nk, causal=cfg.causal, window=cfg.window)
+    grid = (bh, nq, nk)
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda b, i, j: (b, 0)),
+            pl.BlockSpec((1, g, bq, d), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, bq, d), lambda b, i, j: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, g, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * bq, d), jnp.float32),
+            pltpu.VMEM((g * bq,), jnp.float32),
+            pltpu.VMEM((g * bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(aux, q, k, v)
+
+
+def pallas_flash_attention(q, k, v, *, causal: bool = True,
+                           sm_scale: float | None = None, block_q: int = 128,
+                           block_kv: int = 128, window: int | None = None,
+                           kv_len=None, q_offset=0,
+                           interpret: bool = False) -> jax.Array:
+    """Public entry: q (B,Sq,Hq,D); k,v (B,Skv,Hkv,D) -> like q.
+
+    Same contract as ``flash_jnp.flash_attention``; differentiable (jnp
+    blockwise backward via custom_vjp).
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+
+    kl = jnp.broadcast_to(jnp.asarray(
+        skv if kv_len is None else kv_len, jnp.int32), (b,))
+    qo = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+
+    bq = min(block_q, max(16, 1 << (sq - 1).bit_length()))
+    bk = min(block_kv, max(16, 1 << (skv - 1).bit_length()))
+    pad_q = (-sq) % bq
+    pad_k = (-skv) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    # (B,S,H,D) -> (B*Hkv, G, S, D) / (B*Hkv, S, D)
+    qr = jnp.moveaxis(q.reshape(b, sq + pad_q, hkv, g, d), 1, 3) \
+        .reshape(b * hkv, g, sq + pad_q, d)
+    kr = jnp.moveaxis(k, 1, 2).reshape(b * hkv, skv + pad_k, d)
+    vr = jnp.moveaxis(v, 1, 2).reshape(b * hkv, skv + pad_k, d)
+    # f32 so custom_vjp can hand back a zero cotangent (ints need float0)
+    aux = jnp.stack([jnp.repeat(kl, hkv), jnp.repeat(qo, hkv)],
+                    axis=1).astype(jnp.float32)
+
+    cfg = FlashConfig(causal=causal, sm_scale=scale, block_q=bq,
+                      block_kv=bk, window=window)
+
+    fwd = _make_custom(cfg, interpret)
+    o = fwd(qr, kr, vr, aux)  # (B*Hkv, G, Sq', D)
+    o = o.reshape(b, hkv, g, sq + pad_q, d)
+    o = jnp.moveaxis(o, 3, 1).reshape(b, sq + pad_q, hq, d)
+    return o[:, :sq] if pad_q else o
+
+
+@functools.lru_cache(maxsize=None)
+def _make_custom(cfg: FlashConfig, interpret: bool):
+    bwd_core = jax.vmap(functools.partial(_bwd_core, cfg),
+                        in_axes=(0, 0, 0, 0, 0, 0, 0, 0))
+
+    @jax.custom_vjp
+    def f(q, k, v, aux):
+        return _pallas_fwd(q, k, v, aux, cfg, interpret)
+
+    def fwd(q, k, v, aux):
+        o = _pallas_fwd(q, k, v, aux, cfg, interpret)
+        return o, (q, k, v, aux, o)
+
+    def bwd(res, do):
+        q, k, v, aux, o = res
+        # recompute lse blockwise (cheap relative to bwd) via jnp core
+        from .flash_jnp import _fwd_core
+        fwd_core = jax.vmap(functools.partial(_fwd_core, cfg),
+                            in_axes=(0, 0, 0, 0, 0))
+        _, lse = fwd_core(q, k, v, aux[:, 0].astype(jnp.int32),
+                          aux[:, 1].astype(jnp.int32))
+        dq, dk, dv = bwd_core(q, k, v, aux[:, 0].astype(jnp.int32),
+                              aux[:, 1].astype(jnp.int32), o, lse, do)
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+                jnp.zeros_like(res[3]))
+
+    f.defvjp(fwd, bwd)
+    return f

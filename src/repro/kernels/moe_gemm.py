@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: batched per-expert GEMM (the MoE FFN hot loop).
+
+After dispatch, expert inputs sit in an (E, C, D) buffer and each expert
+applies its own (D, F) matrix — a batched GEMM whose batch dimension is the
+expert index.  The kernel tiles (C, F) per expert with a full-depth K so
+each weight tile streams from HBM exactly once per (expert, F-tile) — the
+weight-streaming behaviour that makes decode-stage MoE bandwidth-bound in
+the paper's analysis (§IV, Table V).
+
+  grid = (E, C/block_c, F/block_f)
+  x block: (1, block_c, D); w block: (1, D, block_f);
+  out block: (1, block_c, block_f) — one MXU contraction per step.
+
+block_c/block_f default to 128 (MXU tile); D rides VMEM whole (d_model of
+the MoE archs here is 1.5k-4k: 128*4096*4B = 2MB tiles fit comfortably).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[0].astype(jnp.float32)  # (bc, D)
+    w = w_ref[0].astype(jnp.float32)  # (D, bf)
+    o_ref[0] = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def pallas_expert_gemm(x: jax.Array, w: jax.Array, *, block_c: int = 128,
+                       block_f: int = 128,
+                       interpret: bool = False) -> jax.Array:
+    """(E, C, D) @ (E, D, F) -> (E, C, F)."""
+    e, c, d = x.shape
+    _, _, f = w.shape
+    bc = min(block_c, c)
+    bf = min(block_f, f)
+    pad_c = (-c) % bc
+    pad_f = (-f) % bf
+    if pad_c:
+        x = jnp.pad(x, ((0, 0), (0, pad_c), (0, 0)))
+    if pad_f:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, pad_f)))
+    cp, fp = c + pad_c, f + pad_f
+
+    out = pl.pallas_call(
+        _gemm_kernel,
+        grid=(e, cp // bc, fp // bf),
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda ee, i, j: (ee, i, 0)),
+            pl.BlockSpec((1, d, bf), lambda ee, i, j: (ee, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda ee, i, j: (ee, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, cp, fp), x.dtype),
+        interpret=interpret,
+    )(x, w)
+    return out[:, :c, :f]

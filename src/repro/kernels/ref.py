@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth the Pallas kernels (and the scan-based flash
+implementation) are validated against in ``tests/test_kernels_*``: small
+shapes, full-precision softmax, no blocking tricks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, sm_scale: float | None = None,
+                  window: int | None = None,
+                  kv_len: jax.Array | None = None,
+                  q_offset: jax.Array | int = 0) -> jax.Array:
+    """Naive full-softmax multi-head attention with GQA.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq a multiple of Hkv.
+    ``kv_len``: (B,) or scalar — number of valid (left-aligned) KV entries.
+    ``q_offset``: global position of q[0] relative to kv[0] (chunked prefill
+    / decode).  Returns (B, Sq, Hq, D).
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale  # (B,Hkv,G,Sq,Skv)
+
+    qo = jnp.asarray(q_offset)
+    if qo.ndim == 0:
+        qpos = jnp.broadcast_to(qo + jnp.arange(sq), (b, sq))
+    else:
+        qpos = qo[:, None] + jnp.arange(sq)[None, :]  # (B, Sq)
+    kpos = jnp.arange(skv)
+    valid = jnp.ones((b, sq, skv), dtype=bool)
+    if causal:
+        valid &= kpos[None, None, :] <= qpos[:, :, None]
+    if window is not None:
+        valid &= (qpos[:, :, None] - kpos[None, None, :]) < window
+    if kv_len is not None:
+        kl = jnp.broadcast_to(jnp.asarray(kv_len), (b,))
+        valid &= kpos[None, None, :] < kl[:, None, None]
+    s = jnp.where(valid[:, None, None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def rwkv6_reference(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                    u: jax.Array, state: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """RWKV-6 WKV recurrence, sequential over time (the oracle).
+
+    r,k,v: (B, T, H, N); w: (B, T, H, N) data-dependent decay in (0,1);
+    u: (H, N) bonus; state: (B, H, N, N) mapping k-dim -> v-dim.
+    Returns (out (B,T,H,N), final_state).
+
+      out_t  = r_t . (state + u * k_t^T v_t)
+      state' = diag(w_t) state + k_t^T v_t
+    """
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw  # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,N,N)
+        out = jnp.einsum("bhk,bhkn->bhn", rt, s + uf[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (rf, kf, vf, wf))
+    final, outs = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), final
+
+
+def mamba_scan_reference(x: jax.Array, dt: jax.Array, a: jax.Array,
+                         b: jax.Array, c: jax.Array, d: jax.Array,
+                         state: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Mamba selective scan, sequential over time (the oracle).
+
+    x, dt: (B, T, Di); a: (Di, N); b, c: (B, T, N); d: (Di,);
+    state: (B, Di, N).  Discretization: dA = exp(dt*A), dB = dt*B.
+      h_t = dA_t * h_{t-1} + dB_t x_t ;  y_t = (C_t . h_t) + D x_t
+    Returns (y (B,T,Di), final_state).
+    """
+    xf, dtf, bf, cf = (t.astype(jnp.float32) for t in (x, dt, b, c))
+    af = a.astype(jnp.float32)
+    df = d.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,Di),(B,Di),(B,N),(B,N)
+        da = jnp.exp(dtt[..., None] * af)  # (B,Di,N)
+        dbx = (dtt * xt)[..., None] * bt[:, None, :]  # (B,Di,N)
+        h = da * h + dbx
+        y = jnp.einsum("bdn,bn->bd", h, ct) + df * xt
+        return h, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xf, dtf, bf, cf))
+    final, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+def moe_gemm_reference(tokens: jax.Array, w: jax.Array) -> jax.Array:
+    """Per-expert batched GEMM oracle: (E, C, D) @ (E, D, F) -> (E, C, F)."""
+    return jnp.einsum("ecd,edf->ecf", tokens.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(tokens.dtype)

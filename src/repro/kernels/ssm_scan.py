@@ -1,0 +1,119 @@
+"""Pallas TPU kernel for the RWKV-6 WKV recurrence (chunked scan).
+
+TPU adaptation of the (GPU-oriented) chunked linear-attention kernels: the
+(H, N, N) recurrent state stays resident in VMEM across the whole sequence
+— the grid's chunk dimension is sequential on TPU, so state never round-
+trips to HBM.  Per grid step one (chunk, N) tile of r/k/v/w streams in and
+the (chunk, N) output streams out; HBM traffic is exactly the I/O lower
+bound, vs. the naive scan's per-token state traffic (T x N x N).
+
+  grid = (B * H, n_chunks)
+  r/k/v/w block : (1, chunk, N)     out block : (1, chunk, N)
+  state scratch : (N, N) f32        u (bonus) : (1, N) resident
+
+Inside a chunk the recurrence runs as a fori_loop of rank-1 updates (VPU
+outer products, N = 64 lanes); a fully parallel intra-chunk form trades
+those for MXU matmuls at the cost of materializing decay ratios — measured
+slower for N=64 at these chunk sizes, noted in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, fin_ref,
+                s_ref, *, chunk: int, n_chunks: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    u = u_ref[0].astype(jnp.float32)  # (N,)
+
+    def step(t, state):
+        rt = r_ref[0, t].astype(jnp.float32)  # (N,)
+        kt = k_ref[0, t].astype(jnp.float32)
+        vt = v_ref[0, t].astype(jnp.float32)
+        wt = w_ref[0, t].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]  # (N, N)
+        out = rt @ (state + u[:, None] * kv)  # (N,)
+        o_ref[0, t] = out.astype(o_ref.dtype)
+        return wt[:, None] * state + kv
+
+    s_ref[...] = jax.lax.fori_loop(0, chunk, step, s_ref[...])
+
+    @pl.when(c == n_chunks - 1)
+    def _finish():
+        fin_ref[0] = s_ref[...]
+
+
+def pallas_rwkv6_scan(r, k, v, w, u, state, *, chunk: int = 64,
+                      interpret: bool = False):
+    """r,k,v,w: (B,T,H,N); u: (H,N); state: (B,H,N,N) ->
+    (out (B,T,H,N), final_state)."""
+    b, t, h, n = r.shape
+    pad = (-t) % chunk
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # pad decay with ones so padded steps leave the state unchanged
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    tp = t + pad
+    nc = tp // chunk
+
+    def arrange(x):
+        return jnp.moveaxis(x, 2, 1).reshape(b * h, tp, n)
+
+    rr, kk, vv, ww = (arrange(x) for x in (r, k, v, w))
+    uu = jnp.repeat(u[None].astype(jnp.float32), b, 0).reshape(b * h, n)
+
+    from jax.experimental.pallas import tpu as pltpu
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=nc)
+    out, fin = pl.pallas_call(
+        kernel,
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, n), lambda i, c: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, n, n), lambda i, c: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, tp, n), r.dtype),
+            jax.ShapeDtypeStruct((b * h, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(rr, kk, vv, ww, uu)
+
+    # NOTE: initial state is folded in by the caller when non-zero (ops.py
+    # runs the first chunk through the jnp reference in that case).
+    out = jnp.moveaxis(out.reshape(b, h, tp, n), 1, 2)[:, :t]
+    fin = fin.reshape(b, h, n, n)
+    if state is not None:
+        # incorporate a non-zero initial state analytically: the recurrence
+        # is linear, so out += r_t . (decay_prod_t * state0) and
+        # fin += decay_prod_T * state0.
+        wf = jnp.moveaxis(w.astype(jnp.float32), 2, 1)  # (B,H,Tp,N)
+        cum = jnp.cumprod(wf, axis=2)
+        rr_ = jnp.moveaxis(r.astype(jnp.float32), 2, 1)  # (B,H,Tp,N)
+        shift = jnp.concatenate(
+            [jnp.ones_like(cum[:, :, :1]), cum[:, :, :-1]], axis=2)
+        contrib = jnp.einsum("bhtk,bhkn->bhtn", rr_ * shift,
+                             state.astype(jnp.float32))
+        out = out + jnp.moveaxis(contrib, 1, 2)[:, :t].astype(out.dtype)
+        fin = fin + cum[:, :, -1][..., None] * state.astype(jnp.float32)
+    return out, fin

@@ -1,0 +1,188 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production mesh and record memory / cost / collective analysis.
+
+This is how the distribution config is proven coherent without hardware:
+``.lower().compile()`` must succeed for the 16x16 single-pod mesh AND the
+2x16x16 multi-pod mesh for every cell; failures (sharding mismatch, OOM at
+compile, unsupported collective) are bugs in the framework.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+  python -m repro.launch.dryrun --arch jamba-v0.1-52b --shape decode_32k \
+      --policy inference_seqkv --tag seqkv     # §Perf variants
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs import registry
+from ..configs.shapes import SHAPES, applicable
+from . import hlo_cost
+from .mesh import make_production_mesh
+from .steps import bundle_for
+
+
+def input_specs(arch: str, shape_name: str = "train_4k", mesh=None):
+    """ShapeDtypeStruct stand-ins for every model input of one cell
+    (weak-type-correct, shardable, no device allocation)."""
+    mesh = mesh or make_production_mesh()
+    shape = SHAPES[shape_name]
+    bundle = bundle_for(arch, shape, mesh)
+    return bundle.args
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             policy: str | None = None, out_dir: Path | None = None,
+             tag: str = "baseline", verbose: bool = True,
+             mesh_shape: tuple[int, ...] | None = None,
+             mesh_axes: tuple[str, ...] = ("data", "model"),
+             **ctx_kw) -> dict:
+    """``mesh_shape``: §Perf logical re-mesh of the same 256/512 chips
+    (e.g. (64, 4) = less TP, more DP)."""
+    if mesh_shape is not None:
+        mesh_name = "pod" + "x".join(str(s) for s in mesh_shape)
+    else:
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    shape = SHAPES[shape_name]
+    spec = registry.get_spec(arch)
+    ok, why = applicable(spec, shape)
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "policy": policy, "tag": tag,
+        "n_devices": 512 if multi_pod else 256,
+    }
+    if not ok:
+        record["status"] = "skipped"
+        record["reason"] = why
+        if verbose:
+            print(f"[dryrun] SKIP {arch} x {shape_name}: {why}")
+        _save(record, out_dir, mesh_name, arch, shape_name, tag)
+        return record
+
+    if mesh_shape is not None:
+        from .mesh import make_mesh
+        mesh = make_mesh(mesh_shape, mesh_axes)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        import jax.numpy as jnp
+        # f32 twin: uniform dtype so traffic normalizes exactly to the bf16
+        # deployment (see hlo_cost.analyze_compiled).  Capacity check =
+        # peak_bytes/2 <= HBM.
+        ctx_kw.setdefault("param_dtype", jnp.float32)
+        ctx_kw.setdefault("compute_dtype", jnp.float32)
+        bundle = bundle_for(arch, shape, mesh, policy=policy, **ctx_kw)
+        with mesh:
+            lowered = bundle.lower()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} [{mesh_name}/{tag}] "
+                  f"{bundle.name}: lower {t_lower:.1f}s, "
+                  f"compile {t_compile:.1f}s")
+            print(compiled.memory_analysis())
+            ca = compiled.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0]
+            print({k: v for k, v in ca.items()
+                   if "flops" in k or k == "bytes accessed"})
+        record.update({
+            "status": "ok", "step": bundle.name,
+            "lower_s": t_lower, "compile_s": t_compile,
+        })
+        record.update(hlo_cost.analyze_compiled(compiled, byte_scale=0.5))
+    except Exception as e:  # noqa: BLE001 — record the failure faithfully
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[dryrun] FAIL {arch} x {shape_name}: "
+                  f"{record['error'][:400]}")
+    _save(record, out_dir, mesh_name, arch, shape_name, tag)
+    return record
+
+
+def _save(record: dict, out_dir: Path | None, mesh_name: str, arch: str,
+          shape_name: str, tag: str) -> None:
+    if out_dir is None:
+        return
+    d = Path(out_dir) / mesh_name
+    d.mkdir(parents=True, exist_ok=True)
+    name = f"{arch}__{shape_name}"
+    if tag != "baseline":
+        name += f"__{tag}"
+    (d / f"{name}.json").write_text(json.dumps(record, indent=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch",
+                    help=f"assigned archs {list(registry.ARCH_IDS)} or any "
+                         "paper Table-IV model (e.g. llama3-70b)")
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--all", action="store_true",
+                    help="run every applicable (arch x shape) cell")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="§Perf optimized variants: decode cells use the "
+                         "seqkv policy + carry-cache, MoE cells partition "
+                         "tokens across EP ranks (tag defaults to 'opt')")
+    args = ap.parse_args()
+    if args.opt and args.tag == "baseline":
+        args.tag = "opt"
+
+    out = Path(args.out)
+    mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in registry.ARCH_IDS:
+            for shape_name in SHAPES:
+                cells.append((arch, shape_name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_ok = n_fail = n_skip = 0
+    for arch, shape_name in cells:
+        path = out / mesh_name / f"{arch}__{shape_name}.json"
+        if args.skip_existing and path.exists():
+            prev = json.loads(path.read_text())
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[dryrun] cached {arch} x {shape_name}: "
+                      f"{prev['status']}")
+                continue
+        policy = args.policy
+        ctx_kw = {}
+        if args.opt:
+            ctx_kw["moe_partition_tokens"] = True
+            if SHAPES[shape_name].kind == "decode":
+                policy = policy or "inference_seqkv"
+                ctx_kw["decode_carry_cache"] = True
+        rec = run_cell(arch, shape_name, multi_pod=args.multi_pod,
+                       policy=policy, out_dir=out, tag=args.tag, **ctx_kw)
+        n_ok += rec["status"] == "ok"
+        n_fail += rec["status"] == "error"
+        n_skip += rec["status"] == "skipped"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_fail} FAILED")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,350 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+For each compiled (arch x shape x mesh) cell, derive the three roofline
+terms on TPU v5e:
+
+  compute    = HLO_FLOPs_per_device / 197 TFLOP/s
+  memory     = HLO_bytes_per_device / 819 GB/s          (bf16-normalized)
+  collective = collective_bytes_per_device / 50 GB/s    (per ICI link)
+
+plus MODEL_FLOPS (6 N D for training, 2 N D per generated/processed token
+for inference, N = active params), the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs (remat/redundancy/padding waste shows up here), the
+dominant term, the roofline fraction (useful-compute time / dominant term)
+and a bottleneck note.
+
+Usage:
+  python -m repro.launch.roofline [--dir artifacts/dryrun] [--format md|csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from dataclasses import asdict, dataclass
+from pathlib import Path
+
+from ..configs import registry
+from ..configs.shapes import SHAPES
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    tag: str
+    n_devices: int
+    step: str
+    flops_dev: float
+    bytes_dev: float
+    coll_bytes_dev: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    #: step-time estimates under the two execution models the paper
+    #: discusses (§III-C): full compute/comm overlap (= max of terms) and
+    #: the non-overlapped serial schedule SOTA engines default to (= sum).
+    t_overlapped: float
+    t_serial: float
+    dominant: str
+    model_flops_total: float
+    model_flops_dev: float
+    useful_ratio: float  # MODEL_FLOPS / HLO_FLOPs (per device)
+    roofline_frac: float  # useful-compute time / dominant term
+    peak_gb_dev: float | None
+    fits_hbm: bool | None
+    #: paper Eq. (2) applied to the measured terms: per-step platform energy
+    #: under the linear utilization model (3:4:2:1 split, 200 W/chip peak)
+    energy_j_step: float
+    energy_j_token: float
+    note: str
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6 N D (train) / 2 N_active D (inference); D = tokens processed."""
+    spec = registry.get_spec(arch)
+    shape = SHAPES[shape_name]
+    n_active = spec.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    # decode: one token per request per step
+    return 2.0 * n_active * shape.global_batch
+
+
+def _note(row: "RooflineRow") -> str:
+    d = row.dominant
+    if d == "memory":
+        if "decode" in row.shape or "500k" in row.shape:
+            return ("KV-cache streaming + per-layer cache slice copies "
+                    "dominate; fuse the cache update (donated per-layer "
+                    "buffers) or shard KV along sequence to cut resident "
+                    "reads")
+        return ("HBM traffic dominates; raise arithmetic intensity via "
+                "larger fused blocks / fewer materialized intermediates "
+                "(remat policy, flash blocks)")
+    if d == "compute":
+        if row.useful_ratio < 0.55:
+            return ("compute-bound but <55% of HLO flops are model flops: "
+                    "masked-rectangle attention waste + GQA head padding "
+                    "are the levers (triangular schedule, axis split)")
+        return ("compute-bound near useful peak; gains need lower-level "
+                "kernel efficiency (MXU-aligned tiles)")
+    return ("collective-bound: re-shard to cut payloads (RS+AG instead of "
+            "AR, seq-parallel norms) or overlap collectives with compute")
+
+
+def load_rows(art_dir: Path, mesh: str | None = None,
+              tag: str | None = None) -> list[RooflineRow]:
+    rows = []
+    for f in sorted(art_dir.glob("*/*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        if tag and rec.get("tag", "baseline") != tag:
+            continue
+        hc = rec.get("hlo_cost_normalized") or rec["hlo_cost"]
+        flops = rec["hlo_cost"]["flops"]
+        bytes_ = hc["bytes"]
+        coll = hc["total_collective_bytes"]
+        n_dev = rec["n_devices"]
+        tc = flops / PEAK_FLOPS
+        tm = bytes_ / HBM_BW
+        tn = coll / ICI_BW
+        dominant = max(("compute", tc), ("memory", tm),
+                       ("collective", tn), key=lambda kv: kv[1])[0]
+        mf = model_flops(rec["arch"], rec["shape"])
+        mf_dev = mf / n_dev
+        useful = mf_dev / flops if flops else 0.0
+        t_useful = mf_dev / PEAK_FLOPS
+        frac = t_useful / max(tc, tm, tn) if max(tc, tm, tn) else 0.0
+        ma = rec.get("memory_analysis", {})
+        args_b = ma.get("argument_bytes") or 0
+        temp_b = ma.get("temp_bytes") or 0
+        # CPU's peak_memory_in_bytes undercounts temps; take the max bound
+        peak = max(ma.get("peak_bytes") or 0, args_b + temp_b)
+        peak_norm = peak * 0.5 if peak else None  # f32 twin -> bf16
+        # Eq. (2) energy on the measured terms (overlapped execution)
+        from ..core.hardware import PowerModel
+        t_step = max(tc, tm, tn, 1e-12)
+        pw = PowerModel(200.0 * n_dev)
+        e_step = pw.op_energy(t_step, tc / t_step, tm / t_step,
+                              tn / t_step)
+        shape = SHAPES[rec["shape"]]
+        toks = (shape.global_batch if shape.kind == "decode"
+                else shape.tokens)
+        row = RooflineRow(
+            arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+            tag=rec.get("tag", "baseline"), n_devices=n_dev,
+            step=rec.get("step", "?"), flops_dev=flops, bytes_dev=bytes_,
+            coll_bytes_dev=coll, t_compute=tc, t_memory=tm, t_collective=tn,
+            t_overlapped=max(tc, tm, tn),
+            t_serial=max(tc, tm) + tn,
+            dominant=dominant, model_flops_total=mf, model_flops_dev=mf_dev,
+            useful_ratio=useful, roofline_frac=frac,
+            peak_gb_dev=peak_norm / 1e9 if peak_norm else None,
+            fits_hbm=(peak_norm <= 16e9) if peak_norm else None,
+            energy_j_step=e_step, energy_j_token=e_step / max(toks, 1),
+            note="")
+        row.note = _note(row)
+        rows.append(row)
+    return rows
+
+
+def to_markdown(rows: list[RooflineRow]) -> str:
+    hdr = ("| arch | shape | mesh | step | compute (ms) | memory (ms) | "
+           "collective (ms) | dominant | useful ratio | roofline frac | "
+           "peak GB/dev | fits |")
+    sep = "|" + "---|" * 12
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.step} "
+            f"| {r.t_compute*1e3:.2f} | {r.t_memory*1e3:.2f} "
+            f"| {r.t_collective*1e3:.3f} | **{r.dominant}** "
+            f"| {r.useful_ratio:.2f} | {r.roofline_frac:.2f} "
+            f"| {r.peak_gb_dev:.1f} "
+            f"| {'Y' if r.fits_hbm else 'N'} |"
+            if r.peak_gb_dev is not None else
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.step} "
+            f"| {r.t_compute*1e3:.2f} | {r.t_memory*1e3:.2f} "
+            f"| {r.t_collective*1e3:.3f} | **{r.dominant}** "
+            f"| {r.useful_ratio:.2f} | {r.roofline_frac:.2f} | ? | ? |")
+    return "\n".join(out)
+
+
+def to_csv(rows: list[RooflineRow]) -> str:
+    cols = list(asdict(rows[0])) if rows else []
+    out = [",".join(cols)]
+    for r in rows:
+        d = asdict(r)
+        out.append(",".join(
+            f"{d[c]:.6g}" if isinstance(d[c], float) else str(d[c]).replace(
+                ",", ";") for c in cols))
+    return "\n".join(out)
+
+
+def pallas_flash_io(arch: str, shape_name: str, n_dev: int,
+                    block_q: int = 1024) -> float:
+    """Deployment HBM bytes of the Pallas flash kernel per device per step
+    (bf16): q+o stream once, K/V stream once per q block (causal ~half).
+    Replaces the scanned-jnp flash's score-block spills measured in the
+    CPU HLO (`flash_scope_bytes`)."""
+    spec = registry.get_spec(arch)
+    shape = SHAPES[shape_name]
+    if spec.n_attn_layers() == 0 or shape.kind == "decode":
+        return 0.0
+    b, s = shape.global_batch, shape.seq_len
+    hq, hkv, dh = spec.n_heads, spec.n_kv_heads, spec.d_head
+    nq = max(s // block_q, 1)
+    causal = 0.5 if (spec.attn.causal and shape.kind != "decode") else 1.0
+    qo = 2.0 * b * s * hq * dh * 2  # q read + o write, bf16
+    kv = 2.0 * b * s * hkv * dh * 2 * nq * causal
+    per_pass = (qo + kv) * spec.n_attn_layers() / n_dev
+    passes = 4.0 if shape.kind == "train" else 1.0  # fwd + dq + dkv + remat
+    return per_pass * passes
+
+
+def decode_stream_bytes(arch: str, shape_name: str, n_dev: int) -> float:
+    """Fundamental decode-step traffic (bf16): params once (TP-sharded,
+    batch-replicated) + KV cache / SSM state once + O(tokens)."""
+    spec = registry.get_spec(arch)
+    shape = SHAPES[shape_name]
+    model_shards = 16  # TP axis of the production mesh
+    params = spec.active_param_count() * 2.0 / model_shards
+    kv = (spec.kv_cache_bytes(shape.global_batch, shape.seq_len, 0,
+                              dtype="bf16")) / n_dev
+    return params + kv
+
+
+def perf_variants(art_dir: Path, mesh: str = "pod16x16") -> list[dict]:
+    """§Perf summary: per cell, baseline vs best measured variant vs the
+    Pallas-kernel deployment adjustment."""
+    base = {(r.arch, r.shape): r for r in load_rows(art_dir, mesh=mesh,
+                                                    tag="baseline")}
+    variants: dict[tuple, list[RooflineRow]] = {}
+    # gather all tags (any mesh directory: re-mesh runs live in podAxB dirs)
+    all_rows = []
+    for sub in art_dir.iterdir():
+        if sub.is_dir():
+            all_rows += load_rows(art_dir, mesh=sub.name, tag=None)
+    for r in all_rows:
+        if r.tag == "baseline" and r.mesh == mesh:
+            continue
+        if r.tag == "baseline":
+            continue
+        variants.setdefault((r.arch, r.shape), []).append(r)
+
+    out = []
+    for key, b in sorted(base.items()):
+        arch, shape = key
+        # eligible variants must fit HBM (e.g. the no-remat train variant
+        # wins every term but busts 16 GB) AND use the same chip count as
+        # the baseline — a 512-chip run trivially beats a 256-chip baseline
+        # per device and would not be an optimization claim
+        cands = [c for c in variants.get(key, [])
+                 if c.fits_hbm is not False and c.n_devices == b.n_devices]
+        best = min(cands + [b], key=lambda r: max(r.t_compute, r.t_memory,
+                                                  r.t_collective))
+        b_dom = max(b.t_compute, b.t_memory, b.t_collective)
+        v_dom = max(best.t_compute, best.t_memory, best.t_collective)
+        # pallas adjustment on the best variant
+        rec_file = None
+        for sub in art_dir.iterdir():
+            name = f"{arch}__{shape}"
+            if best.tag != "baseline":
+                name += f"__{best.tag}"
+            f = sub / f"{name}.json"
+            if sub.is_dir() and f.exists():
+                rec = json.loads(f.read_text())
+                if rec.get("mesh") == best.mesh:
+                    rec_file = rec
+                    break
+        flash_scope = 0.0
+        if rec_file and rec_file.get("flash_scope_bytes"):
+            flash_scope = rec_file["flash_scope_bytes"] * 0.5  # normalize
+        if SHAPES[shape].kind == "decode":
+            adj_bytes = decode_stream_bytes(arch, shape, best.n_devices)
+        else:
+            adj_bytes = max(best.bytes_dev - flash_scope, 0.0) \
+                + pallas_flash_io(arch, shape, best.n_devices)
+        t_mem_adj = adj_bytes / HBM_BW
+        adj_dom = max(best.t_compute, t_mem_adj, best.t_collective)
+        t_useful = best.model_flops_dev / PEAK_FLOPS
+        out.append({
+            "arch": arch, "shape": shape,
+            "baseline_dominant_ms": b_dom * 1e3,
+            "baseline_dom_term": b.dominant,
+            "best_tag": best.tag if best.tag != "baseline" else
+            ("baseline" if best.mesh == mesh else best.mesh),
+            "best_mesh": best.mesh,
+            "best_dominant_ms": v_dom * 1e3,
+            "measured_speedup": b_dom / v_dom if v_dom else 0.0,
+            "pallas_adj_dominant_ms": adj_dom * 1e3,
+            "total_speedup": b_dom / adj_dom if adj_dom else 0.0,
+            "roofline_frac_baseline": b.roofline_frac,
+            "roofline_frac_best": t_useful / v_dom if v_dom else 0.0,
+            "roofline_frac_pallas": t_useful / adj_dom if adj_dom else 0.0,
+        })
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--format", choices=["md", "csv"], default="md")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--variants", action="store_true",
+                    help="§Perf summary: baseline vs best variant vs "
+                         "Pallas-deployment adjustment")
+    args = ap.parse_args()
+    if args.variants:
+        rows_v = perf_variants(Path(args.dir), mesh=args.mesh or "pod16x16")
+        cols = list(rows_v[0]) if rows_v else []
+        lines = [",".join(cols)]
+        for r in rows_v:
+            lines.append(",".join(
+                f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+                for c in cols))
+        text = "\n".join(lines)
+        if args.out:
+            Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+            Path(args.out).write_text(text + "\n")
+        print(text)
+        import numpy as np
+        sp = [r["measured_speedup"] for r in rows_v]
+        tot = [r["total_speedup"] for r in rows_v]
+        print(f"\ngeomean measured speedup: "
+              f"{float(np.exp(np.mean(np.log(sp)))):.2f}x; with Pallas "
+              f"deployment adjustment: "
+              f"{float(np.exp(np.mean(np.log(tot)))):.2f}x")
+        return
+    rows = load_rows(Path(args.dir), mesh=args.mesh, tag=args.tag)
+    text = to_markdown(rows) if args.format == "md" else to_csv(rows)
+    if args.out:
+        Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.out).write_text(text + "\n")
+    print(text)
+    # summary
+    if rows:
+        worst = min(rows, key=lambda r: r.roofline_frac)
+        coll = max(rows, key=lambda r: r.t_collective
+                   / max(r.t_compute, r.t_memory, 1e-12))
+        print(f"\nworst roofline fraction : {worst.arch} x {worst.shape} "
+              f"({worst.roofline_frac:.3f})")
+        print(f"most collective-bound   : {coll.arch} x {coll.shape} "
+              f"(coll/max(other)={coll.t_collective / max(coll.t_compute, coll.t_memory):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Executable JAX model zoo.
+
+Every assigned architecture is built from the same :class:`repro.core.ModelSpec`
+the analytical profiler consumes, via :func:`repro.models.model.build_model`:
+
+    model = build_model(spec, mesh=mesh, policy=get_policy("inference_tp"))
+    params = model.init(jax.random.key(0))
+    logits = model.forward(params, tokens)            # train/prefill pass
+    logits, cache = model.prefill(params, tokens)     # fills the KV cache
+    logits, cache = model.decode_step(params, cache, tok)
+
+Families: dense / dense-GQA transformers (LLaMA-style and Qwen-style with QKV
+bias), squared-ReLU Nemotron MLPs, MoE with shared + fine-grained routed
+experts, RWKV6, Mamba, hybrid Mamba+attention+MoE (Jamba), encoder-only
+(HuBERT) and VLM/audio backbones with stub frontends.
+"""
+
+from .model import Model, build_model
+
+__all__ = ["Model", "build_model"]

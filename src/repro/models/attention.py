@@ -1,0 +1,223 @@
+"""Multi-head / grouped-query attention layer with KV cache.
+
+Three execution paths, selected by ``ModelContext.attn_impl``:
+
+  direct : plain einsum softmax (small sequences, and the decode step)
+  flash  : scan-based blockwise attention (``repro.kernels.flash_jnp``) —
+           memory-bounded, custom VJP; what the dry run lowers
+  pallas : the TPU Pallas kernel (``repro.kernels.flash_attention``),
+           validated in interpret mode on CPU
+
+KV cache layout: (B, T_max, Hkv, Dh) per layer, left-aligned with a shared
+per-request ``lengths`` vector.  Decode inserts at position ``lengths`` and
+attends with a kv_len mask — GSPMD turns this into head-sharded or
+sequence-sharded attention depending on the sharding policy.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.modelspec import ModelSpec
+from ..kernels import ops as kops
+from .common import KeyGen, ModelContext, apply_rope, dense_init, rms_norm
+
+
+def init_attention(spec: ModelSpec, keys: KeyGen, dtype) -> dict:
+    d, hq, hkv, dh = spec.d_model, spec.n_heads, spec.n_kv_heads, spec.d_head
+    p = {
+        "norm": jnp.ones((d,), dtype),
+        "wq": dense_init(keys(), (d, hq * dh), dtype),
+        "wk": dense_init(keys(), (d, hkv * dh), dtype),
+        "wv": dense_init(keys(), (d, hkv * dh), dtype),
+        "wo": dense_init(keys(), (hq * dh, d), dtype),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def attention_axes(spec: ModelSpec) -> dict:
+    axes = {
+        "norm": ("embed_vec",),
+        "wq": ("embed", "qkv_heads"),
+        "wk": ("embed", "kv_qkv"),
+        "wv": ("embed", "kv_qkv"),
+        "wo": ("qkv_heads", "embed"),
+    }
+    if spec.qkv_bias:
+        axes.update({"bq": ("qkv_heads",), "bk": ("kv_qkv",),
+                     "bv": ("kv_qkv",)})
+    return axes
+
+
+@dataclass(frozen=True)
+class AttnCache:
+    """Per-layer KV cache (a pytree).
+
+    With int8 quantization (paper Table V's lossy KV bucket; our §Perf
+    iteration) ``k``/``v`` are int8 and ``k_scale``/``v_scale`` hold the
+    per-(token, head) absmax/127 scales — halving the decode stream vs
+    bf16.  Scale fields are None for the full-precision cache.
+    """
+    k: jax.Array  # (B, T, Hkv, Dh)
+    v: jax.Array
+    k_scale: jax.Array | None = None  # (B, T, Hkv) f32
+    v_scale: jax.Array | None = None
+
+
+def init_attn_cache(spec: ModelSpec, batch: int, max_len: int, dtype,
+                    quantized: bool = False) -> AttnCache:
+    shape = (batch, max_len, spec.n_kv_heads, spec.d_head)
+    if quantized:
+        sshape = (batch, max_len, spec.n_kv_heads)
+        return AttnCache(k=jnp.zeros(shape, jnp.int8),
+                         v=jnp.zeros(shape, jnp.int8),
+                         k_scale=jnp.zeros(sshape, jnp.float32),
+                         v_scale=jnp.zeros(sshape, jnp.float32))
+    return AttnCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+jax.tree_util.register_dataclass(
+    AttnCache, data_fields=["k", "v", "k_scale", "v_scale"], meta_fields=[])
+
+
+def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(B, S, H, D) -> int8 values + (B, S, H) scales."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _project_qkv(spec: ModelSpec, ctx: ModelContext, params, x, positions):
+    b, s, _ = x.shape
+    hq, hkv, dh = spec.n_heads, spec.n_kv_heads, spec.d_head
+    h = rms_norm(x, params["norm"])
+    q = h @ params["wq"]
+    k = h @ params["wk"]
+    v = h @ params["wv"]
+    if spec.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, hq, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    if spec.pos == "rope":
+        q = apply_rope(q, positions, spec.rope_theta)
+        k = apply_rope(k, positions, spec.rope_theta)
+    q = ctx.shard(q, "batch", "seq", "act_heads", None)
+    k = ctx.shard(k, "batch", "seq", "act_kv_heads", None)
+    v = ctx.shard(v, "batch", "seq", "act_kv_heads", None)
+    return q, k, v
+
+
+def _attend(spec: ModelSpec, ctx: ModelContext, q, k, v, *, causal,
+            kv_len=None, q_offset=0):
+    window = spec.attn.window if spec.attn.kind == "swa" else None
+    sq, skv = q.shape[1], k.shape[1]
+    impl = ctx.attn_impl
+    if impl == "auto":
+        # direct path materializes (B, H, Sq, Skv) scores: only for short
+        # full passes and single-token decode steps.
+        impl = "direct" if (sq * skv <= 1024 * 1024 and sq > 1) or sq <= 16 \
+            else "flash"
+    if impl in ("flash", "pallas") and ctx.mesh is not None \
+            and k.shape[2] < q.shape[2]:
+        # GQA under TP: the blockwise kernels regroup q as (B, Hkv, G, S, D),
+        # and with Hkv < model-axis size GSPMD has no consistent layout for
+        # that split — it falls back to re-gathering Q inside every kv-block
+        # loop step.  Expanding K/V to the full head count restores a clean
+        # single-dimension head sharding (q-heads padded at worst); the K/V
+        # duplication is fresh-activation-sized (not the KV cache) and the
+        # Pallas TPU kernel avoids it entirely on real hardware.
+        g = q.shape[2] // k.shape[2]
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        k = ctx.shard(k, "batch", "seq", "act_heads", None)
+        v = ctx.shard(v, "batch", "seq", "act_heads", None)
+    return kops.multi_head_attention(
+        q, k, v, causal=causal, window=window, kv_len=kv_len,
+        q_offset=q_offset, impl=impl, block_q=ctx.flash_block_q,
+        block_kv=ctx.flash_block_kv, causal_skip=ctx.flash_causal_skip)
+
+
+def attention_block(spec: ModelSpec, ctx: ModelContext, params: dict,
+                    x: jax.Array, positions: jax.Array,
+                    cache: AttnCache | None = None,
+                    lengths: jax.Array | None = None
+                    ) -> tuple[jax.Array, AttnCache | None]:
+    """x: (B, S, D).  Three modes:
+
+      * full pass (cache None): training / encoder forward,
+      * prefill (cache provided, lengths == 0): fills cache[0:S],
+      * decode  (cache provided, S == 1): inserts at ``lengths`` and attends
+        against the cache prefix.
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(spec, ctx, params, x, positions)
+
+    new_cache = None
+    if cache is None:
+        o = _attend(spec, ctx, q, k, v, causal=spec.attn.causal)
+    else:
+        # Unified cached path covering prefill (lengths=0), chunked-prefill
+        # continuation (lengths=offset, s=chunk) and decode (s=1): insert the
+        # s new K/V rows at each request's `lengths` offset (in-place under
+        # donation), then attend causally against the valid prefix.
+        assert lengths is not None
+        quant = cache.k_scale is not None
+        if quant:
+            k_store, k_sc = _quantize_kv(k)
+            v_store, v_sc = _quantize_kv(v)
+        else:
+            k_store, v_store = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
+
+        if s == cache.k.shape[1]:  # full-width prefill: static insert
+            full = lambda c, t: jax.lax.dynamic_update_slice(
+                c, t, (0,) * c.ndim)
+            kc, vc = full(cache.k, k_store), full(cache.v, v_store)
+            if quant:
+                ksc = full(cache.k_scale, k_sc)
+                vsc = full(cache.v_scale, v_sc)
+        else:
+            ins = jax.vmap(lambda c, t, p: jax.lax.dynamic_update_slice(
+                c, t, (p,) + (0,) * (c.ndim - 1)))
+            kc, vc = ins(cache.k, k_store, lengths), \
+                ins(cache.v, v_store, lengths)
+            if quant:
+                ksc = ins(cache.k_scale, k_sc, lengths)
+                vsc = ins(cache.v_scale, v_sc, lengths)
+        kc = ctx.shard(kc, "batch", "kv_seq", "act_kv_heads", None)
+        vc = ctx.shard(vc, "batch", "kv_seq", "act_kv_heads", None)
+        new_cache = AttnCache(k=kc, v=vc,
+                              k_scale=ksc if quant else None,
+                              v_scale=vsc if quant else None)
+        if s == cache.k.shape[1]:
+            # fresh full-width prefill: attend over the new tokens directly
+            o = _attend(spec, ctx, q, k, v, causal=spec.attn.causal)
+        else:
+            ka, va = kc, vc
+            if quant:
+                ka = _dequantize_kv(kc, ksc, k.dtype)
+                va = _dequantize_kv(vc, vsc, v.dtype)
+            o = _attend(spec, ctx, q, ka, va, causal=spec.attn.causal,
+                        kv_len=lengths + s, q_offset=lengths)
+
+    o = ctx.shard(o, "batch", "seq", "act_heads", None)
+    o = o.reshape(b, s, spec.n_heads * spec.d_head)
+    y = o @ params["wo"]
+    y = ctx.shard(y, "batch", "seq_res", "act_embed")
+    return y, new_cache

@@ -1,0 +1,232 @@
+"""Top-level model: embedding -> decoder stack -> head, with the three entry
+points the framework lowers (forward/loss for training, prefill and
+decode_step for serving).
+
+``build_model(spec, mesh, policy)`` works for every assigned architecture;
+audio/VLM backbones take precomputed frontend embeddings (``embeds=``)
+instead of token ids (the modality frontend is a stub per the assignment).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.modelspec import ModelSpec
+from ..sharding import get_policy, tree_shardings
+from .common import KeyGen, ModelContext, embed_init, rms_norm
+from . import transformer as T
+
+
+@dataclass(frozen=True)
+class ModelCache:
+    layers: Any  # stacked per-position caches
+    lengths: jax.Array  # (B,) valid tokens per request
+
+
+jax.tree_util.register_dataclass(ModelCache, data_fields=["layers", "lengths"],
+                                 meta_fields=[])
+
+
+@dataclass(frozen=True)
+class Model:
+    spec: ModelSpec
+    ctx: ModelContext
+
+    # -- init -----------------------------------------------------------------
+    def init(self, rng: jax.Array) -> dict:
+        spec, ctx = self.spec, self.ctx
+        keys = KeyGen(rng)
+        dtype = ctx.param_dtype
+        n_shards = 1
+        if ctx.mesh is not None and "model" in ctx.mesh.shape:
+            n_shards = ctx.mesh.shape["model"]
+        params: dict[str, Any] = {}
+        # Decoder models own a token embedding even with a modality frontend
+        # (a VLM decodes text tokens); encoder-only frontends (HuBERT) don't.
+        if spec.frontend == "none" or spec.decoder:
+            params["embed"] = embed_init(keys(), (spec.vocab, spec.d_model),
+                                         dtype)
+        params["layers"] = T.init_stack(spec, keys, dtype, n_shards)
+        params["final_norm"] = jnp.ones((spec.d_model,), dtype)
+        if not spec.tied_embeddings:
+            params["lm_head"] = embed_init(keys(), (spec.d_model, spec.vocab),
+                                           dtype)
+        return params
+
+    def param_axes(self) -> dict:
+        spec = self.spec
+        axes: dict[str, Any] = {}
+        if spec.frontend == "none" or spec.decoder:
+            axes["embed"] = ("vocab", "embed")
+        axes["layers"] = T.stack_axes(spec)
+        axes["final_norm"] = ("embed_vec",)
+        if not spec.tied_embeddings:
+            axes["lm_head"] = ("embed", "vocab")
+        return axes
+
+    def param_shardings(self, mesh=None):
+        mesh = mesh or self.ctx.mesh
+        rules = dict(self.ctx.policy.rules)
+        # weight-vector / derived logical axes
+        rules.setdefault("embed_vec", None)
+        rules.setdefault("qkv_heads", rules.get("heads"))
+        rules.setdefault("kv_qkv", rules.get("kv_heads"))
+        return tree_shardings(self.param_axes(), rules, mesh)
+
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree.leaves(params))
+
+    def cache_axes(self) -> ModelCache:
+        return ModelCache(
+            layers=T.stack_cache_axes(self.spec, self.ctx.kv_quant),
+            lengths=("batch",))
+
+    def cache_shardings(self, mesh=None):
+        mesh = mesh or self.ctx.mesh
+        rules = dict(self.ctx.policy.rules)
+        rules.setdefault("embed_vec", None)
+        return tree_shardings(self.cache_axes(), rules, mesh)
+
+    # -- helpers ----------------------------------------------------------------
+    def _embed_in(self, params, tokens=None, embeds=None):
+        if embeds is not None:  # stub modality frontend: precomputed embeds
+            return embeds.astype(self.ctx.compute_dtype)
+        assert self.spec.frontend == "none" or self.spec.decoder, \
+            "encoder-only frontend archs take embeds"
+        return params["embed"][tokens].astype(self.ctx.compute_dtype)
+
+    def _head_w(self, params):
+        if self.spec.tied_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    def _logits(self, params, h):
+        h = rms_norm(h, params["final_norm"])
+        logits = h @ self._head_w(params)
+        return self.ctx.shard(logits, "batch", "seq", "act_vocab")
+
+    # -- training / encoder forward ---------------------------------------------
+    def forward(self, params, tokens=None, *, embeds=None,
+                positions=None) -> jax.Array:
+        """Full pass returning logits for every position (small configs)."""
+        x = self._embed_in(params, tokens, embeds)
+        b, s, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x = self.ctx.shard(x, "batch", "seq_res", "act_embed")
+        x, _ = T.apply_stack(self.spec, self.ctx, params["layers"], x,
+                             positions)
+        return self._logits(params, x)
+
+    def loss(self, params, tokens=None, targets=None, *, embeds=None,
+             mask=None, chunk: int = 512) -> jax.Array:
+        """Mean next-token (or unit-prediction) cross entropy, computed in
+        sequence chunks so the (B, S, V) logits never materialize."""
+        x = self._embed_in(params, tokens, embeds)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x = self.ctx.shard(x, "batch", "seq_res", "act_embed")
+        x, _ = T.apply_stack(self.spec, self.ctx, params["layers"], x,
+                             positions)
+        x = rms_norm(x, params["final_norm"])
+        w = self._head_w(params)
+        if mask is None:
+            mask = jnp.ones((b, s), jnp.float32)
+
+        chunk = min(chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            targets = jnp.pad(targets, ((0, 0), (0, pad)))
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        nc = (s + pad) // chunk
+        xc = x.reshape(b, nc, chunk, -1).swapaxes(0, 1)
+        tc = targets.reshape(b, nc, chunk).swapaxes(0, 1)
+        mc = mask.reshape(b, nc, chunk).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def chunk_loss(carry, xs):
+            xb, tb, mb = xs
+            logits = (xb @ w).astype(jnp.float32)
+            logits = self.ctx.shard(logits, "batch", "seq", "act_vocab")
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            picked = jnp.take_along_axis(logits, tb[..., None],
+                                         axis=-1)[..., 0]
+            nll = (lse - picked) * mb
+            return carry + nll.sum(), None
+
+        total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32),
+                                (xc, tc, mc))
+        return total / jnp.maximum(mask.sum(), 1.0)
+
+    # -- serving ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> ModelCache:
+        layers = T.init_stack_cache(self.spec, batch, max_len,
+                                    self.ctx.compute_dtype,
+                                    quantized=self.ctx.kv_quant)
+        return ModelCache(layers=layers,
+                          lengths=jnp.zeros((batch,), jnp.int32))
+
+    def prefill(self, params, tokens=None, *, embeds=None, cache: ModelCache,
+                lengths=None) -> tuple[jax.Array, ModelCache]:
+        """Process the prompt, fill the cache, return last-position logits.
+
+        ``lengths``: (B,) true prompt lengths (right padding allowed);
+        defaults to the full width.
+        """
+        x = self._embed_in(params, tokens, embeds)
+        b, s, _ = x.shape
+        if lengths is None:
+            lengths = jnp.full((b,), s, jnp.int32)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x = self.ctx.shard(x, "batch", "seq_res", "act_embed")
+        x, new_layers = T.apply_stack(self.spec, self.ctx, params["layers"],
+                                      x, positions, cache=cache.layers,
+                                      lengths=jnp.zeros((b,), jnp.int32))
+        x = x[jnp.arange(b), lengths - 1]  # last valid position
+        logits = self._logits(params, x[:, None])[:, 0]
+        return logits, ModelCache(layers=new_layers, lengths=lengths)
+
+    def prefill_chunk(self, params, cache: ModelCache, tokens=None, *,
+                      embeds=None) -> tuple[jax.Array, ModelCache]:
+        """Chunked-prefill continuation (paper §IV-A): process the next
+        ``chunk`` prompt tokens starting at each request's current
+        ``cache.lengths`` offset.  Returns logits for the chunk's last
+        position.  SSM states / token-shift caches carry forward, so this
+        works for every architecture family."""
+        x = self._embed_in(params, tokens, embeds)
+        b, s, _ = x.shape
+        positions = cache.lengths[:, None] + jnp.arange(s)[None, :]
+        x = self.ctx.shard(x, "batch", "seq_res", "act_embed")
+        x, new_layers = T.apply_stack(self.spec, self.ctx, params["layers"],
+                                      x, positions, cache=cache.layers,
+                                      lengths=cache.lengths)
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        return logits, ModelCache(layers=new_layers,
+                                  lengths=cache.lengths + s)
+
+    def decode_step(self, params, cache: ModelCache, tokens: jax.Array,
+                    *, embeds=None) -> tuple[jax.Array, ModelCache]:
+        """One autoregressive step.  tokens: (B, 1) -> logits (B, V)."""
+        x = self._embed_in(params, tokens, embeds)
+        b = x.shape[0]
+        positions = cache.lengths[:, None]
+        x = self.ctx.shard(x, "batch", "seq_res", "act_embed")
+        x, new_layers = T.apply_stack(self.spec, self.ctx, params["layers"],
+                                      x, positions, cache=cache.layers,
+                                      lengths=cache.lengths)
+        logits = self._logits(params, x)[:, 0]
+        return logits, ModelCache(layers=new_layers,
+                                  lengths=cache.lengths + 1)
+
+
+def build_model(spec: ModelSpec, mesh=None, policy=None, **ctx_kw) -> Model:
+    if isinstance(policy, str):
+        policy = get_policy(policy)
+    ctx = ModelContext(spec=spec, mesh=mesh,
+                       policy=policy or get_policy("inference_tp"), **ctx_kw)
+    return Model(spec=spec, ctx=ctx)

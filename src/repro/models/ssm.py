@@ -1,0 +1,262 @@
+"""State-space mixers: Mamba (selective scan) and RWKV-6 (Finch).
+
+Both carry a constant-size recurrent state per request, which is what makes
+the ``long_500k`` decode shape tractable: decode cost is context-length
+independent (paper §V, Fig. 13c).
+
+Mamba is the Jamba hybrid's workhorse; RWKV-6 implements data-dependent
+per-channel decay via a low-rank projection (the defining Finch feature).
+The WKV/selective recurrences run through ``repro.kernels.ops`` which
+chunks + remat-checkpoints them (and offers the Pallas TPU kernel).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..core.modelspec import ModelSpec
+from ..kernels import ops as kops
+from .common import KeyGen, ModelContext, dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MambaCache:
+    conv: jax.Array  # (B, K-1, Di) last inputs for the causal conv
+    ssm: jax.Array  # (B, Di, N)
+
+
+jax.tree_util.register_dataclass(MambaCache, data_fields=["conv", "ssm"],
+                                 meta_fields=[])
+
+
+def _dt_rank(spec: ModelSpec) -> int:
+    return max(spec.ssm.d_inner(spec.d_model) // 16, 1)
+
+
+def init_mamba(spec: ModelSpec, keys: KeyGen, dtype) -> dict:
+    s = spec.ssm
+    d, di, n = spec.d_model, s.d_inner(spec.d_model), s.d_state
+    dtr = _dt_rank(spec)
+    a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "in_proj": dense_init(keys(), (d, 2 * di), dtype),
+        "conv_w": dense_init(keys(), (s.d_conv, di), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(keys(), (di, dtr + 2 * n), dtype),
+        "dt_w": dense_init(keys(), (dtr, di), dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "a_log": jnp.log(a),  # f32
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(keys(), (di, d), dtype),
+    }
+
+
+def mamba_axes(spec: ModelSpec) -> dict:
+    return {
+        "norm": ("embed_vec",), "in_proj": ("embed", "ssm_inner"),
+        "conv_w": ("conv", "ssm_inner"), "conv_b": ("ssm_inner",),
+        "x_proj": ("ssm_inner", None), "dt_w": ("lora", "ssm_inner"),
+        "dt_bias": ("ssm_inner",), "a_log": ("ssm_inner", "ssm_state"),
+        "d_skip": ("ssm_inner",), "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+def init_mamba_cache(spec: ModelSpec, batch: int, dtype) -> MambaCache:
+    s = spec.ssm
+    di = s.d_inner(spec.d_model)
+    return MambaCache(conv=jnp.zeros((batch, s.d_conv - 1, di), dtype),
+                      ssm=jnp.zeros((batch, di, s.d_state), jnp.float32))
+
+
+def _causal_conv(x: jax.Array, prev: jax.Array, w: jax.Array,
+                 b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv along time.  x: (B,S,Di); prev: (B,K-1,Di)."""
+    k = w.shape[0]
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)  # (B, S+K-1, Di)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_prev = xp[:, -(k - 1):] if k > 1 else prev
+    return out + b, new_prev
+
+
+def mamba_block(spec: ModelSpec, ctx: ModelContext, params: dict,
+                x: jax.Array, cache: MambaCache | None = None
+                ) -> tuple[jax.Array, MambaCache | None]:
+    s = spec.ssm
+    b, t, d = x.shape
+    di, n = s.d_inner(d), s.d_state
+    dtr = _dt_rank(spec)
+
+    h = rms_norm(x, params["norm"])
+    xz = h @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = ctx.shard(xin, "batch", "seq", "act_ssm_inner")
+
+    prev = cache.conv if cache is not None else \
+        jnp.zeros((b, s.d_conv - 1, di), x.dtype)
+    xc, new_prev = _causal_conv(xin, prev, params["conv_w"],
+                                params["conv_b"])
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ params["x_proj"]
+    dt_raw = proj[..., :dtr]
+    bmat = proj[..., dtr:dtr + n]
+    cmat = proj[..., dtr + n:]
+    dt = jax.nn.softplus(dt_raw @ params["dt_w"]
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"])
+
+    state = cache.ssm if cache is not None else \
+        jnp.zeros((b, di, n), jnp.float32)
+    y, new_state = kops.mamba_scan(xc, dt, a, bmat, cmat,
+                                   params["d_skip"], state)
+    y = y * jax.nn.silu(z)
+    y = ctx.shard(y, "batch", "seq", "act_ssm_inner")
+    out = y @ params["out_proj"]
+    out = ctx.shard(out, "batch", "seq_res", "act_embed")
+    new_cache = (MambaCache(conv=new_prev, ssm=new_state)
+                 if cache is not None else None)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RWKVCache:
+    tm_shift: jax.Array  # (B, 1, D) previous token (time mix)
+    cm_shift: jax.Array  # (B, 1, D) previous token (channel mix)
+    wkv: jax.Array  # (B, H, N, N)
+
+
+jax.tree_util.register_dataclass(
+    RWKVCache, data_fields=["tm_shift", "cm_shift", "wkv"], meta_fields=[])
+
+
+def init_rwkv6(spec: ModelSpec, keys: KeyGen, dtype) -> dict:
+    d, ff = spec.d_model, spec.d_ff
+    hs = spec.ssm.head_size
+    nh = d // hs
+    lo = 64
+    return {
+        "norm_tm": jnp.ones((d,), dtype),
+        "maa_r": jnp.zeros((d,), dtype), "maa_k": jnp.zeros((d,), dtype),
+        "maa_v": jnp.zeros((d,), dtype), "maa_g": jnp.zeros((d,), dtype),
+        "maa_w": jnp.zeros((d,), dtype),
+        "wr": dense_init(keys(), (d, d), dtype),
+        "wk": dense_init(keys(), (d, d), dtype),
+        "wv": dense_init(keys(), (d, d), dtype),
+        "wg": dense_init(keys(), (d, d), dtype),
+        "w_lora1": dense_init(keys(), (d, lo), dtype),
+        "w_lora2": dense_init(keys(), (lo, d), dtype),
+        "w_bias": jnp.full((d,), -2.0, jnp.float32),  # base decay
+        "u_bonus": jnp.zeros((nh, hs), jnp.float32),
+        "ln_x": jnp.ones((d,), dtype),
+        "wo": dense_init(keys(), (d, d), dtype),
+        "norm_cm": jnp.ones((d,), dtype),
+        "cm_maa_r": jnp.zeros((d,), dtype), "cm_maa_k": jnp.zeros((d,), dtype),
+        "cm_key": dense_init(keys(), (d, ff), dtype),
+        "cm_rec": dense_init(keys(), (d, d), dtype),
+        "cm_value": dense_init(keys(), (ff, d), dtype),
+    }
+
+
+def rwkv6_axes(spec: ModelSpec) -> dict:
+    vec = ("embed_vec",)
+    return {
+        "norm_tm": vec, "maa_r": vec, "maa_k": vec, "maa_v": vec,
+        "maa_g": vec, "maa_w": vec,
+        "wr": ("embed", "ssm_inner"), "wk": ("embed", "ssm_inner"),
+        "wv": ("embed", "ssm_inner"), "wg": ("embed", "ssm_inner"),
+        "w_lora1": ("embed", "lora"), "w_lora2": ("lora", "ssm_inner"),
+        "w_bias": ("ssm_inner",), "u_bonus": ("ssm_heads", None),
+        "ln_x": vec, "wo": ("ssm_inner", "embed"),
+        "norm_cm": vec, "cm_maa_r": vec, "cm_maa_k": vec,
+        "cm_key": ("embed", "mlp"), "cm_rec": ("embed", "ssm_inner"),
+        "cm_value": ("mlp", "embed"),
+    }
+
+
+def init_rwkv_cache(spec: ModelSpec, batch: int, dtype) -> RWKVCache:
+    d = spec.d_model
+    hs = spec.ssm.head_size
+    nh = d // hs
+    return RWKVCache(tm_shift=jnp.zeros((batch, 1, d), dtype),
+                     cm_shift=jnp.zeros((batch, 1, d), dtype),
+                     wkv=jnp.zeros((batch, nh, hs, hs), jnp.float32))
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """Previous-token features: concat(prev, x[:-1])."""
+    return jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def rwkv6_block(spec: ModelSpec, ctx: ModelContext, params: dict,
+                x: jax.Array, cache: RWKVCache | None = None
+                ) -> tuple[jax.Array, RWKVCache | None]:
+    b, t, d = x.shape
+    hs = spec.ssm.head_size
+    nh = d // hs
+
+    # ---- time mix ----------------------------------------------------------
+    h = rms_norm(x, params["norm_tm"])
+    prev_tm = cache.tm_shift if cache is not None else \
+        jnp.zeros((b, 1, d), x.dtype)
+    hs_prev = _token_shift(h, prev_tm)
+    sx = hs_prev - h
+
+    def mix(name):
+        return h + sx * params[f"maa_{name}"]
+
+    r = (mix("r") @ params["wr"]).reshape(b, t, nh, hs)
+    k = (mix("k") @ params["wk"]).reshape(b, t, nh, hs)
+    v = (mix("v") @ params["wv"]).reshape(b, t, nh, hs)
+    g = mix("g") @ params["wg"]
+    # data-dependent decay (the RWKV-6 signature): low-rank per-channel
+    w_dyn = jnp.tanh(mix("w") @ params["w_lora1"]) @ params["w_lora2"]
+    logw = -jnp.exp(params["w_bias"] + w_dyn.astype(jnp.float32))
+    w = jnp.exp(logw).reshape(b, t, nh, hs)  # decay in (0, 1)
+
+    r = ctx.shard(r, "batch", "seq", "ssm_heads", None)
+    k = ctx.shard(k, "batch", "seq", "ssm_heads", None)
+    v = ctx.shard(v, "batch", "seq", "ssm_heads", None)
+    w = ctx.shard(w, "batch", "seq", "ssm_heads", None)
+
+    state = cache.wkv if cache is not None else \
+        jnp.zeros((b, nh, hs, hs), jnp.float32)
+    wkv, new_state = kops.rwkv6_scan(r, k, v, w, params["u_bonus"], state)
+
+    # per-head group norm, gate, output projection
+    wkv = wkv.reshape(b, t, d)
+    wkv = rms_norm(wkv, params["ln_x"])
+    y_tm = (wkv * jax.nn.silu(g)) @ params["wo"]
+    y_tm = ctx.shard(y_tm, "batch", "seq_res", "act_embed")
+    x = x + y_tm
+
+    # ---- channel mix --------------------------------------------------------
+    h2 = rms_norm(x, params["norm_cm"])
+    prev_cm = cache.cm_shift if cache is not None else \
+        jnp.zeros((b, 1, d), x.dtype)
+    sx2 = _token_shift(h2, prev_cm) - h2
+    kx = h2 + sx2 * params["cm_maa_k"]
+    rx = h2 + sx2 * params["cm_maa_r"]
+    kk = jnp.square(jax.nn.relu(kx @ params["cm_key"]))
+    kk = ctx.shard(kk, "batch", "seq", "act_mlp")
+    y_cm = jax.nn.sigmoid(rx @ params["cm_rec"]) * (kk @ params["cm_value"])
+    y_cm = ctx.shard(y_cm, "batch", "seq_res", "act_embed")
+
+    new_cache = None
+    if cache is not None:
+        new_cache = RWKVCache(tm_shift=h[:, -1:], cm_shift=h2[:, -1:],
+                              wkv=new_state)
+    # Unlike attn/mamba blocks, RWKV applies BOTH its residuals internally
+    # (channel mix is its FFN); the stack must not add another residual.
+    return x + y_cm, new_cache

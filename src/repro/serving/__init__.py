@@ -1,0 +1,6 @@
+"""Serving substrate: continuous-batching engine, chunked prefill,
+speculative decoding, beam search, sampling."""
+
+from .engine import EngineConfig, Request, ServeEngine
+
+__all__ = ["EngineConfig", "Request", "ServeEngine"]

@@ -1,0 +1,78 @@
+"""Beam-search decoding (paper §II-B): S_b parallel hypotheses share the
+prompt's prefill, each appending its own suffix to a per-beam cache row.
+Each step decodes all beams, expands by top-k over the joint (beam x vocab)
+scores, and reorders the cache rows by gathering on the batch axis."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model, ModelCache
+
+
+def _gather_rows(cache: ModelCache, order: jax.Array) -> ModelCache:
+    layers = jax.tree.map(lambda x: jnp.take(x, order, axis=1), cache.layers)
+    return ModelCache(layers=layers,
+                      lengths=jnp.take(cache.lengths, order))
+
+
+class BeamSearcher:
+    def __init__(self, model: Model, params, beam_size: int = 4,
+                 max_seq: int = 512, length_penalty: float = 0.6):
+        self.model, self.params = model, params
+        self.sb = beam_size
+        self.alpha = length_penalty
+        self.max_seq = max_seq
+        self._decode = jax.jit(model.decode_step)
+        self._chunk = jax.jit(model.prefill_chunk)
+        self._gather = jax.jit(_gather_rows)
+
+    def search(self, prompt: list[int], max_new_tokens: int,
+               eos_id: int | None = None) -> tuple[list[int], float]:
+        sb = self.sb
+        cache = self.model.init_cache(sb, self.max_seq)
+        toks = jnp.asarray([prompt] * sb, jnp.int32)
+        logits, cache = self._chunk(self.params, cache, toks)
+
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        # first expansion: take top-S_b distinct continuations of beam 0
+        top = jnp.argsort(-logp[0])[:sb]
+        scores = np.asarray(logp[0][top])
+        beams = [[int(t)] for t in np.asarray(top)]
+        last = np.asarray(top, np.int32)[:, None]
+        done: list[tuple[float, list[int]]] = []
+
+        for _ in range(max_new_tokens - 1):
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(last))
+            logp = np.asarray(
+                jax.nn.log_softmax(logits.astype(jnp.float32), -1))
+            joint = scores[:, None] + logp  # (S_b, V)
+            flat = joint.reshape(-1)
+            top = np.argsort(-flat)[: 2 * sb]  # over-sample for eos exits
+            new_beams, new_scores, order, new_last = [], [], [], []
+            for idx in top:
+                b, t = divmod(int(idx), logp.shape[1])
+                cand = beams[b] + [t]
+                if eos_id is not None and t == eos_id:
+                    lp = len(cand) ** self.alpha
+                    done.append((flat[idx] / lp, cand))
+                    continue
+                new_beams.append(cand)
+                new_scores.append(flat[idx])
+                order.append(b)
+                new_last.append(t)
+                if len(new_beams) == sb:
+                    break
+            if not new_beams:
+                break
+            beams, scores = new_beams, np.asarray(new_scores)
+            last = np.asarray(new_last, np.int32)[:, None]
+            cache = self._gather(cache, jnp.asarray(order, jnp.int32))
+
+        for b, s in zip(beams, scores):
+            done.append((s / (len(b) ** self.alpha), b))
+        done.sort(key=lambda x: -x[0])
+        return done[0][1], float(done[0][0])

@@ -1,0 +1,177 @@
+"""Continuous-batching serving engine (the end-to-end inference driver).
+
+Slot-based continuous batching in the JetStream style: a fixed pool of
+decode slots shares one device-resident KV cache; prompts are prefilled in
+``chunk_size`` pieces (chunked prefill, paper §IV-A — bounds the decode
+stall between chunks) into a single-slot scratch cache and inserted into a
+free slot; every engine step advances all active slots by one token.
+Finished requests free their slot immediately, so new prompts join without
+draining the batch (Orca-style iteration-level scheduling).
+
+All device work happens in three jitted functions (prefill_chunk, insert,
+decode); the scheduler is pure Python and therefore easy to fault-inject
+and test.
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model, ModelCache
+from .sampling import SamplingConfig, sample
+
+
+@dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+    sampling: SamplingConfig = field(default_factory=SamplingConfig)
+    rid: int = -1
+    # filled by the engine:
+    output: list[int] = field(default_factory=list)
+    state: str = "queued"  # queued | prefill | decode | done
+    slot: int = -1
+    ttft_steps: int = 0  # engine steps until first token (TTFT proxy)
+    tpot_steps: int = 0
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 8
+    max_seq: int = 512
+    chunk_size: int = 128
+    decode_priority: bool = True  # decode before prefill chunks (SLO order)
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, config: EngineConfig,
+                 rng: jax.Array | None = None):
+        self.model = model
+        self.params = params
+        self.cfg = config
+        self.rng = rng if rng is not None else jax.random.key(0)
+        self._ids = itertools.count()
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, Request] = {}  # slot -> request
+        self.free_slots = list(range(config.max_slots))
+        self.steps = 0
+
+        self.cache = model.init_cache(config.max_slots, config.max_seq)
+        self.scratch = model.init_cache(1, config.max_seq)
+        self._tokens = np.zeros((config.max_slots, 1), np.int32)
+
+        self._jit_chunk = jax.jit(model.prefill_chunk)
+        self._jit_decode = jax.jit(model.decode_step)
+        self._jit_insert = jax.jit(self._insert, donate_argnums=(0,),
+                                   static_argnames=("slot",))
+
+    # -- cache slot insertion -------------------------------------------------
+    @staticmethod
+    def _insert(big: ModelCache, small: ModelCache, slot: int) -> ModelCache:
+        def ins(b, s):
+            # leaves: (R, B, ...) vs (R, 1, ...)
+            idx = (0, slot) + (0,) * (b.ndim - 2)
+            return jax.lax.dynamic_update_slice(b, s.astype(b.dtype), idx)
+
+        layers = jax.tree.map(ins, big.layers, small.layers)
+        lengths = big.lengths.at[slot].set(small.lengths[0])
+        return ModelCache(layers=layers, lengths=lengths)
+
+    # -- public API --------------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        req.rid = next(self._ids)
+        req.state = "queued"
+        self.queue.append(req)
+        return req.rid
+
+    def _start_prefill(self, req: Request) -> None:
+        self._prefill_req = req
+        self._prefill_pos = 0
+        self.scratch = jax.tree.map(jnp.zeros_like, self.scratch)
+        req.state = "prefill"
+
+    def _prefill_step(self) -> None:
+        """Process one chunk of the in-flight prefill.  The final chunk runs
+        at its exact width (no padding), which keeps SSM states and token-
+        shift caches exact for every architecture family."""
+        req = self._prefill_req
+        c = self.cfg.chunk_size
+        lo = self._prefill_pos
+        hi = min(lo + c, len(req.prompt))
+        chunk = np.asarray(req.prompt[lo:hi], np.int32)[None, :]
+        logits, self.scratch = self._jit_chunk(self.params, self.scratch,
+                                               jnp.asarray(chunk))
+        self._prefill_pos = hi
+        if self._prefill_pos >= len(req.prompt):
+            # prompt complete: sample the first token, claim a slot
+            self.rng, k = jax.random.split(self.rng)
+            tok = int(sample(logits, k, req.sampling)[0])
+            req.output.append(tok)
+            req.ttft_steps = self.steps
+            slot = self.free_slots.pop()
+            req.slot = slot
+            req.state = "decode"
+            self.cache = self._jit_insert(self.cache, self.scratch, slot=slot)
+            self._tokens[slot, 0] = tok
+            self.active[slot] = req
+            self._prefill_req = None
+
+    def _decode_step(self) -> None:
+        if not self.active:
+            return
+        toks = jnp.asarray(self._tokens)
+        logits, self.cache = self._jit_decode(self.params, self.cache, toks)
+        for slot, req in list(self.active.items()):
+            self.rng, k = jax.random.split(self.rng)
+            tok = int(sample(logits[slot:slot + 1], k, req.sampling)[0])
+            req.output.append(tok)
+            req.tpot_steps += 1
+            done = (len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)
+                    or int(self.cache.lengths[slot]) >= self.cfg.max_seq - 1)
+            if done:
+                req.state = "done"
+                del self.active[slot]
+                self.free_slots.append(slot)
+            else:
+                self._tokens[slot, 0] = tok
+
+    # -- main loop ------------------------------------------------------------
+    @property
+    def _prefilling(self) -> bool:
+        return getattr(self, "_prefill_req", None) is not None
+
+    def step(self) -> None:
+        """One engine iteration: a decode step for all active slots plus one
+        prefill chunk (decode-priority order)."""
+        self.steps += 1
+        if not self._prefilling and self.queue and self.free_slots:
+            self._start_prefill(self.queue.popleft())
+        if self.cfg.decode_priority:
+            self._decode_step()
+            if self._prefilling:
+                self._prefill_step()
+        else:
+            if self._prefilling:
+                self._prefill_step()
+            self._decode_step()
+
+    def run(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not (self.queue or self.active or self._prefilling):
+                break
+            self.step()
+
+    def serve(self, requests: list[Request],
+              max_steps: int = 10_000) -> list[Request]:
+        for r in requests:
+            self.submit(r)
+        self.run(max_steps)
+        return requests

@@ -1,0 +1,182 @@
+"""Speculative decoding (paper §IV-B): a small draft model proposes N
+tokens autoregressively; the target model verifies all N+1 positions in one
+chunked pass; rejection sampling keeps the target distribution exact
+(Leviathan et al.).
+
+Both models share slot geometry; on rejection the caches roll back by
+truncating ``lengths`` (stale K/V rows beyond the pointer are masked by the
+kv_len attention mask, so no data movement is needed — the same trick the
+engine uses for chunked prefill padding).
+
+Note the hardware implication the paper quantifies: both models plus both
+KV caches stay resident (§IV-B's 24-28% extra memory), and the target's
+verify pass processes N+1 tokens per call — pushing decode toward the
+compute-bound regime.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model, ModelCache
+
+
+@dataclass
+class SpecDecodeStats:
+    proposed: int = 0
+    accepted: int = 0
+    target_passes: int = 0
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(self.proposed, 1)
+
+    @property
+    def tokens_per_pass(self) -> float:
+        return (self.accepted + self.target_passes) / max(self.target_passes,
+                                                          1)
+
+
+def _truncate(cache: ModelCache, lengths) -> ModelCache:
+    return ModelCache(layers=cache.layers,
+                      lengths=jnp.asarray(lengths, jnp.int32))
+
+
+class SpeculativeDecoder:
+    """Greedy-temperature speculative decoding for a single stream."""
+
+    def __init__(self, target: Model, target_params, draft: Model,
+                 draft_params, n_spec: int = 4, max_seq: int = 512,
+                 temperature: float = 1.0, rng=None):
+        assert target.spec.vocab == draft.spec.vocab
+        self.target, self.tp = target, target_params
+        self.draft, self.dp = draft, draft_params
+        self.n = n_spec
+        self.temp = max(temperature, 1e-4)
+        self.rng = rng if rng is not None else jax.random.key(0)
+        self.t_cache = target.init_cache(1, max_seq)
+        self.d_cache = draft.init_cache(1, max_seq)
+        self._t_chunk = jax.jit(target.prefill_chunk)
+        self._d_step = jax.jit(draft.decode_step)
+        self._d_chunk = jax.jit(draft.prefill_chunk)
+        self.stats = SpecDecodeStats()
+
+    def _probs(self, logits):
+        return jax.nn.softmax(logits.astype(jnp.float32) / self.temp, -1)
+
+    def _np_choice(self, probs: np.ndarray) -> int:
+        self.rng, k = jax.random.split(self.rng)
+        seed = int(jax.random.randint(k, (), 0, 2**31 - 1))
+        p = np.asarray(probs, np.float64)
+        return int(np.random.default_rng(seed).choice(len(p), p=p / p.sum()))
+
+    def prefill(self, prompt: list[int]) -> int:
+        """Consume the prompt in both models; returns the first token.
+        Invariant from here on: each cache holds exactly ``seq[:-1]`` —
+        everything but the newest token, which the next round consumes."""
+        toks = jnp.asarray(prompt, jnp.int32)[None, :]
+        t_logits, self.t_cache = self._t_chunk(self.tp, self.t_cache, toks)
+        _, self.d_cache = self._d_chunk(self.dp, self.d_cache, toks)
+        self.rng, k = jax.random.split(self.rng)
+        tok = int(jax.random.categorical(k, jnp.log(
+            self._probs(t_logits))[0]))
+        self.seq = list(prompt) + [tok]
+        return tok
+
+    def decode_round(self) -> list[int]:
+        """One draft-propose / target-verify cycle; returns >= 1 newly
+        accepted tokens (appended to ``self.seq``)."""
+        n = self.n
+        seq = self.seq
+
+        # --- draft catch-up + n autoregressive proposals ---------------------
+        # feed whatever the draft hasn't consumed yet (>= 1 token: the
+        # newest; +1 more after a fully-accepted round with bonus token)
+        d_len = int(self.d_cache.lengths[0])
+        feed = jnp.asarray([seq[d_len:]], jnp.int32)
+        logits, self.d_cache = self._d_chunk(self.dp, self.d_cache, feed)
+        d_tokens, d_probs = [], []
+        for i in range(n):
+            p = self._probs(logits)[0]
+            self.rng, k = jax.random.split(self.rng)
+            tok = int(jax.random.categorical(k, jnp.log(p)))
+            d_tokens.append(tok)
+            d_probs.append(np.asarray(p))
+            if i < n - 1:
+                logits, self.d_cache = self._d_step(
+                    self.dp, self.d_cache, jnp.asarray([[tok]], jnp.int32))
+        self.stats.proposed += n
+
+        # --- target verifies [unconsumed seq suffix, d_1 .. d_n] -------------
+        t_len = int(self.t_cache.lengths[0])
+        gap = seq[t_len:]  # >= 1 tokens, ends with seq[-1]
+        verify = jnp.asarray([gap + d_tokens], jnp.int32)
+        t_logits_all, new_t_cache = self._verify_logits(verify)
+        self.stats.target_passes += 1
+        base = len(gap) - 1  # logits index predicting d_1
+
+        accepted: list[int] = []
+        for i, d_tok in enumerate(d_tokens):
+            p_t = np.asarray(self._probs(t_logits_all[base + i]))
+            p_d = d_probs[i]
+            self.rng, k = jax.random.split(self.rng)
+            u = float(jax.random.uniform(k))
+            if u < min(1.0, float(p_t[d_tok]) / max(float(p_d[d_tok]),
+                                                    1e-20)):
+                accepted.append(d_tok)
+                self.stats.accepted += 1
+            else:
+                # resample from the residual distribution
+                resid = np.maximum(p_t - p_d, 0.0)
+                if resid.sum() <= 0:
+                    resid = p_t
+                accepted.append(self._np_choice(resid))
+                break
+        else:
+            # all n accepted: bonus token from the target's last position
+            p_t = np.asarray(self._probs(t_logits_all[base + n]))
+            accepted.append(self._np_choice(p_t))
+
+        # --- roll back to the accepted frontier: caches hold seq[:-1] --------
+        # (accepted[:-1] were consumed and match seq; positions beyond are
+        # stale K/V of rejected proposals, masked off by the truncation)
+        self.seq = seq + accepted
+        frontier = len(self.seq) - 1
+        self.t_cache = _truncate(new_t_cache, [frontier])
+        self.d_cache = _truncate(self.d_cache,
+                                 [min(int(self.d_cache.lengths[0]),
+                                      frontier)])
+        return accepted
+
+    def _verify_logits(self, tokens):
+        """Target logits for every position of the verify chunk."""
+        model, params = self.target, self.tp
+
+        def fn(params, cache, toks):
+            x = model._embed_in(params, toks)
+            b, s, _ = x.shape
+            positions = cache.lengths[:, None] + jnp.arange(s)[None, :]
+            from ..models import transformer as T
+            from ..models.common import rms_norm
+            x, new_layers = T.apply_stack(model.spec, model.ctx,
+                                          params["layers"], x, positions,
+                                          cache=cache.layers,
+                                          lengths=cache.lengths)
+            h = rms_norm(x, params["final_norm"])
+            logits = h @ model._head_w(params)
+            return logits[0], ModelCache(layers=new_layers,
+                                         lengths=cache.lengths + s)
+
+        if not hasattr(self, "_verify_jit"):
+            self._verify_jit = jax.jit(fn)
+        return self._verify_jit(params, self.t_cache, tokens)
+
+    def generate(self, prompt: list[int], max_new_tokens: int) -> list[int]:
+        out = [self.prefill(prompt)]
+        while len(out) < max_new_tokens:
+            out.extend(self.decode_round())
+        return out[:max_new_tokens]

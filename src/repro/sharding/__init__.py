@@ -1,0 +1,21 @@
+"""Distribution layer: logical-axis sharding rules over the production mesh.
+
+Mesh axes (see ``repro.launch.mesh``): ``("pod", "data", "model")`` for the
+multi-pod mesh, ``("data", "model")`` for one pod.  Every parameter and
+activation in :mod:`repro.models` is annotated with *logical* axis names
+(``"embed"``, ``"heads"``, ``"mlp"``, ``"batch"``, ...); a
+:class:`ShardingPolicy` maps those to mesh axes, so switching between e.g.
+Megatron-style inference TP and 2D FSDP+TP training — or between the
+baseline and the §Perf-optimized layouts — is a one-line policy change.
+"""
+
+from .axes import (AxisRules, fit_sharding, logical_spec, logical_sharding,
+                   constrain, tree_shardings)
+from .policy import (POLICIES, ShardingPolicy, inference_tp, train_2d,
+                     inference_seqkv, get_policy)
+
+__all__ = [
+    "AxisRules", "fit_sharding", "logical_spec", "logical_sharding",
+    "constrain", "tree_shardings", "POLICIES", "ShardingPolicy",
+    "inference_tp", "train_2d", "inference_seqkv", "get_policy",
+]

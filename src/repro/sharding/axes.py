@@ -1,0 +1,96 @@
+"""Logical axis -> mesh axis translation (MaxText-style sharding rules)."""
+
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: Maps a logical axis name to a mesh axis, a tuple of mesh axes, or None.
+AxisRules = Mapping[str, Any]
+
+
+def _mesh_axes(rules: AxisRules, mesh: Mesh, logical: str | None):
+    if logical is None:
+        return None
+    if logical not in rules:
+        raise KeyError(f"no sharding rule for logical axis {logical!r}")
+    target = rules[logical]
+    if target is None:
+        return None
+    if isinstance(target, str):
+        target = (target,)
+    present = tuple(a for a in target if a in mesh.axis_names)
+    if not present:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+def logical_spec(logical_axes: Sequence[str | None], rules: AxisRules,
+                 mesh: Mesh) -> P:
+    """('batch','seq','embed') -> PartitionSpec(('pod','data'), None, ...)"""
+    return P(*[_mesh_axes(rules, mesh, ax) for ax in logical_axes])
+
+
+def logical_sharding(logical_axes: Sequence[str | None], rules: AxisRules,
+                     mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, logical_spec(logical_axes, rules, mesh))
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[str | None],
+              rules: AxisRules, mesh: Mesh) -> jax.Array:
+    """with_sharding_constraint by logical axis names."""
+    return jax.lax.with_sharding_constraint(
+        x, logical_sharding(logical_axes, rules, mesh))
+
+
+def fit_sharding(shape: tuple[int, ...], sharding: NamedSharding
+                 ) -> NamedSharding:
+    """Make an explicit in/out sharding legal for ``shape``.
+
+    jit in/out shardings must divide dimensions exactly (unlike internal
+    constraints, which GSPMD pads).  Axes that don't divide are dropped
+    (dim replicated) — e.g. 8 GQA kv-heads or 40 RWKV heads on a 16-way
+    model axis, or a 504-entry codebook vocab.  The resulting replication
+    is deliberate baseline waste, visible in the roofline table; optimized
+    policies (§Perf) re-shard such tensors along always-divisible axes.
+    """
+    mesh = sharding.mesh
+    new_spec = []
+    for i, axes in enumerate(sharding.spec):
+        if axes is None or i >= len(shape):
+            new_spec.append(axes)
+            continue
+        axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+        while axes_t:
+            total = 1
+            for a in axes_t:
+                total *= mesh.shape[a]
+            if shape[i] % total == 0:
+                break
+            axes_t = axes_t[:-1]
+        if not axes_t:
+            new_spec.append(None)
+        elif len(axes_t) == 1:
+            new_spec.append(axes_t[0])
+        else:
+            new_spec.append(axes_t)
+    return NamedSharding(mesh, P(*new_spec))
+
+
+def tree_shardings(logical_tree, rules: AxisRules, mesh: Mesh):
+    """Map a pytree of logical-axes tuples to a pytree of NamedShardings.
+
+    Leaves are tuples/lists of logical axis names (or None for replicated).
+    """
+    def leaf(axes):
+        if axes is None:
+            return None  # absent optional field (e.g. fp cache scales)
+        return logical_sharding(tuple(axes), rules, mesh)
+
+    return jax.tree.map(leaf, logical_tree,
+                        is_leaf=lambda x: x is None or (
+                            isinstance(x, (tuple, list))
+                            and all(isinstance(a, (str, type(None)))
+                                    for a in x)))

@@ -1,0 +1,6 @@
+"""Training substrate: optimizer, train loop, checkpointing, fault
+tolerance, gradient compression, straggler mitigation."""
+
+from .optimizer import AdamWConfig, adamw
+
+__all__ = ["AdamWConfig", "adamw"]

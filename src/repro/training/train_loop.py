@@ -1,0 +1,137 @@
+"""The fault-tolerant training loop.
+
+Wires together: model + optimizer (jitted, donated train_step), the
+deterministic data pipeline, async checkpointing, straggler monitoring,
+optional gradient compression (error-feedback int8), and the failure
+injector used by the restart tests.  ``Trainer.resume()`` +
+``fault.run_with_restarts`` give checkpoint/restart semantics; because the
+pipeline is a pure function of the step index, a restarted run consumes
+identical batches.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.pipeline import DataConfig, TokenPipeline
+from ..models.model import Model
+from .checkpoint import CheckpointManager
+from .compression import CompressionConfig, ErrorFeedback
+from .fault import FailureInjector, StragglerMonitor
+from .optimizer import AdamWConfig, Optimizer, adamw
+
+
+@dataclass
+class TrainConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    log_every: int = 10
+    checkpoint_dir: str = "checkpoints"
+    optimizer: AdamWConfig = field(default_factory=AdamWConfig)
+    compression: CompressionConfig = field(
+        default_factory=lambda: CompressionConfig(enabled=False))
+    micro_batches: int = 1  # gradient accumulation
+
+
+class Trainer:
+    def __init__(self, model: Model, data_cfg: DataConfig,
+                 cfg: TrainConfig, rng: jax.Array | None = None,
+                 failure_injector: FailureInjector | None = None,
+                 mesh=None):
+        self.model = model
+        self.cfg = cfg
+        self.data = TokenPipeline(data_cfg)
+        self.ckpt = CheckpointManager(cfg.checkpoint_dir)
+        self.monitor = StragglerMonitor()
+        self.injector = failure_injector
+        self.optimizer = adamw(cfg.optimizer)
+        self.errfb = ErrorFeedback(cfg.compression)
+        self.mesh = mesh
+        self.history: list[dict] = []
+
+        rng = rng if rng is not None else jax.random.key(0)
+        self.params = model.init(rng)
+        self.opt_state = self.optimizer.init(self.params)
+        self._step_fn = self._build_step()
+
+    def _build_step(self):
+        model, optimizer = self.model, self.optimizer
+        mb = self.cfg.micro_batches
+
+        def loss_fn(p, x, t):
+            return model.loss(p, tokens=x, targets=t)
+
+        def step(params, opt_state, batch):
+            x, t = batch["x"], batch["targets"]
+            if mb > 1:  # gradient accumulation over micro-batches
+                xs = x.reshape(mb, -1, *x.shape[1:])
+                ts = t.reshape(mb, -1, *t.shape[1:])
+
+                def acc(carry, xt):
+                    loss, grads = jax.value_and_grad(loss_fn)(
+                        params, xt[0], xt[1])
+                    return (carry[0] + loss,
+                            jax.tree.map(jnp.add, carry[1], grads)), None
+
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss, grads), _ = jax.lax.scan(acc, (0.0, zero), (xs, ts))
+                loss = loss / mb
+                grads = jax.tree.map(lambda g: g / mb, grads)
+            else:
+                loss, grads = jax.value_and_grad(loss_fn)(params, x, t)
+            new_params, new_state = optimizer.update(grads, opt_state,
+                                                     params)
+            return loss, new_params, new_state
+
+        return jax.jit(step, donate_argnums=(0, 1))
+
+    # -- checkpoint/restart -------------------------------------------------------
+    def _state(self):
+        return {"params": self.params, "opt": self.opt_state}
+
+    def resume(self) -> int:
+        restored = self.ckpt.restore(jax.eval_shape(lambda: self._state()))
+        if restored is None:
+            return 0
+        tree, extra, step = restored
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.data.load_state_dict(extra["data"])
+        return int(extra["next_step"])
+
+    def _checkpoint(self, step: int) -> None:
+        self.ckpt.save_async(step, self._state(),
+                             extra={"next_step": step + 1,
+                                    "data": self.data.state_dict()})
+
+    # -- main loop -----------------------------------------------------------------
+    def run(self, start_step: int, total_steps: int,
+            callback: Callable[[int, float], None] | None = None) -> None:
+        for step in range(start_step, total_steps):
+            t0 = time.time()
+            batch = self.data.batch_at(step)
+            self.data.step = step + 1
+            if self.injector is not None:
+                self.injector.check(step)
+            loss, self.params, self.opt_state = self._step_fn(
+                self.params, self.opt_state,
+                {"x": jnp.asarray(batch["x"]),
+                 "targets": jnp.asarray(batch["targets"])})
+            loss = float(loss)
+            dt = time.time() - t0
+            straggled = self.monitor.observe(step, dt)
+            self.history.append({"step": step, "loss": loss, "dt": dt,
+                                 "straggled": straggled})
+            if callback is not None:
+                callback(step, loss)
+            if (step + 1) % self.cfg.checkpoint_every == 0 \
+                    or step + 1 == total_steps:
+                self._checkpoint(step)
+        self.ckpt.wait()

@@ -1,0 +1,32 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches see
+1 device; only launch/dryrun.py (and subprocess tests) fake a fleet."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)
+
+
+def tiny_dense_spec(**kw):
+    from repro.core.modelspec import AttnSpec, ModelSpec
+    defaults = dict(name="tiny", d_model=64, n_layers=2, n_heads=4,
+                    n_kv_heads=2, d_head=16, d_ff=128, vocab=256,
+                    attn=AttnSpec(kind="full", causal=True))
+    defaults.update(kw)
+    return ModelSpec(**defaults)
+
+
+@pytest.fixture
+def tiny_spec():
+    return tiny_dense_spec()
+
+
+@pytest.fixture
+def tiny_model(tiny_spec):
+    from repro.models import build_model
+    return build_model(tiny_spec, mesh=None, param_dtype=jnp.float32,
+                       compute_dtype=jnp.float32)

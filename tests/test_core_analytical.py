@@ -1,0 +1,243 @@
+"""GenZ analytical core: parameter accounting, roofline Eq. (1), collective
+models, stage metrics, requirements (§VI), energy (Eq. 2)."""
+
+import math
+
+import pytest
+
+from repro.core import (GenZ, PAPER_MODELS, Collective, NetworkDim,
+                        Optimizations, ParallelismConfig, Workload,
+                        collective_time, paper_model)
+from repro.core.hardware import GB, TB, PowerModel, tpu_v5e
+from repro.core.network import collective_time_1d
+from repro.core.profiler import PassSpec, model_ops, pass_flops
+from repro.core.requirements import platform_requirements
+from repro.core.stages import expected_tokens_per_cycle
+from repro.core.usecases import USE_CASES, use_case
+
+
+# ---------------------------------------------------------------------------
+# Model profiler
+# ---------------------------------------------------------------------------
+
+PARAM_EXPECT = {
+    "llama3-8b": 8.0e9, "llama3-70b": 70.6e9, "gpt3-175b": 175.0e9,
+    "mixtral-8x22b": 141e9, "mixtral-8x7b": 46.7e9, "llama3-405b": 405e9,
+    "llama2-7b": 6.74e9,
+}
+
+
+@pytest.mark.parametrize("name,expected", sorted(PARAM_EXPECT.items()))
+def test_param_counts_match_published(name, expected):
+    got = paper_model(name).param_count()
+    assert abs(got - expected) / expected < 0.02, (name, got)
+
+
+def test_moe_active_params():
+    m = paper_model("mixtral-8x7b")
+    # 12.9B active of 46.7B total
+    assert 11e9 < m.active_param_count() < 14e9
+    assert m.active_param_count() < m.param_count() / 3
+
+
+def test_kv_cache_formula():
+    m = paper_model("llama3-8b")  # 32L, kv 8, d_head 128
+    per_tok = m.kv_bytes_per_token("fp8")
+    assert per_tok == 2 * 8 * 128 * 32  # 2 * Hkv * d * L * 1 byte
+    wl = Workload(batch=4, tau_p=1000, tau_d=200, beam=4)
+    total = m.kv_cache_bytes(4, 1000, 200, beam=4, dtype="fp8")
+    assert total == 4 * (1000 + 4 * 200) * per_tok
+
+
+def test_prefill_flops_close_to_2nd():
+    m = paper_model("llama3-8b")
+    toks = 4 * 1024
+    ops = model_ops(m, PassSpec(4, 1024, 1024, True), ParallelismConfig(),
+                    Optimizations(), head_q_len=1)
+    flops = pass_flops(ops)
+    # linear part ~ 2*N*D minus the embedding/LM-head rows (lookup + last-
+    # position logits only); attention adds a few % at 1k context
+    assert 0.82 < flops / (2 * m.active_param_count() * toks) < 1.35
+
+
+# ---------------------------------------------------------------------------
+# Collectives
+# ---------------------------------------------------------------------------
+
+def test_allreduce_ring_formula():
+    dim = NetworkDim("x", 8, 100 * GB, 1e-6, topology="ring")
+    size = 1 * GB
+    t = collective_time_1d(Collective.ALL_REDUCE, size, dim)
+    expect = 2 * (7 / 8) * size / (100 * GB) + 2 * 7 * 1e-6
+    assert math.isclose(t, expect, rel_tol=1e-9)
+
+
+def test_allreduce_equals_rs_plus_ag():
+    dim = NetworkDim("x", 8, 100 * GB, 1e-6, topology="ring")
+    size = 1 * GB
+    ar = collective_time_1d(Collective.ALL_REDUCE, size, dim)
+    rs = collective_time_1d(Collective.REDUCE_SCATTER, size, dim)
+    ag = collective_time_1d(Collective.ALL_GATHER, size, dim)
+    assert math.isclose(ar, rs + ag, rel_tol=1e-9)
+
+
+def test_latency_dominates_small_messages():
+    """Paper Fig. 8: decode-sized AR (<128KB) is link-latency bound."""
+    dim = NetworkDim("nvl", 8, 350 * GB, 0.5e-6, topology="switch")
+    small = collective_time_1d(Collective.ALL_REDUCE, 64e3, dim)
+    smaller = collective_time_1d(Collective.ALL_REDUCE, 8e3, dim)
+    assert small / smaller < 2.0  # nearly constant
+    big = collective_time_1d(Collective.ALL_REDUCE, 512e6, dim)
+    bigger = collective_time_1d(Collective.ALL_REDUCE, 1024e6, dim)
+    assert 1.8 < bigger / big < 2.05  # bandwidth-bound: linear
+
+
+def test_hierarchical_collective_monotone():
+    d1 = NetworkDim("fast", 8, 400 * GB, 0.5e-6)
+    d2 = NetworkDim("slow", 4, 50 * GB, 5e-6, topology="switch")
+    one = collective_time(Collective.ALL_REDUCE, 1 * GB, [d1])
+    two = collective_time(Collective.ALL_REDUCE, 1 * GB, [d1, d2])
+    assert two > one
+
+
+# ---------------------------------------------------------------------------
+# Stages + metrics
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def hgx():
+    return GenZ.hgx_h100(8).with_opt(weight_dtype="fp8", act_dtype="fp8",
+                                     kv_dtype="fp8")
+
+
+def test_prefill_compute_bound(hgx):
+    pre = hgx.prefill("llama3-70b", use_case="chat", batch=8,
+                      parallelism=dict(tp=8))
+    assert pre.timing.compute_time > pre.timing.memory_time
+
+
+def test_decode_memory_bound(hgx):
+    dec = hgx.decode("llama3-70b", use_case="chat", batch=1,
+                     parallelism=dict(tp=8))
+    assert dec.timing.memory_time > dec.timing.compute_time
+
+
+def test_latency_identity(hgx):
+    rep = hgx.estimate("llama3-8b", use_case="chat", batch=4,
+                       parallelism=dict(tp=8))
+    assert math.isclose(rep.latency,
+                        rep.ttft + rep.tpot * USE_CASES["chat"].tau_d,
+                        rel_tol=1e-9)
+    assert rep.throughput == pytest.approx(
+        4 / rep.decode.meta["tpot_throughput"])
+
+
+def test_batching_improves_throughput(hgx):
+    t1 = hgx.estimate("llama3-8b", use_case="chat", batch=1,
+                      parallelism=dict(tp=8)).throughput
+    t16 = hgx.estimate("llama3-8b", use_case="chat", batch=16,
+                       parallelism=dict(tp=8)).throughput
+    assert t16 > 4 * t1  # decode is weight-bound: batching ~free
+
+
+def test_gqa_reduces_decode_time_at_long_context(hgx):
+    long_wl = Workload(batch=8, tau_p=32768, tau_d=256)
+    mha = paper_model("gpt3-175b")
+    gqa = mha.scaled(name="gpt3-gqa", n_kv_heads=8)
+    t_mha = hgx.decode(mha, workload=long_wl, batch=8,
+                       parallelism=dict(tp=8)).meta["tpot"]
+    t_gqa = hgx.decode(gqa, workload=long_wl, batch=8,
+                       parallelism=dict(tp=8)).meta["tpot"]
+    assert t_gqa < t_mha
+
+
+def test_oom_detection(hgx):
+    wl = Workload(batch=256, tau_p=100_000, tau_d=1000)
+    dec = hgx.decode("llama3-405b", workload=wl, batch=256,
+                     parallelism=dict(tp=8))
+    assert not dec.memory.fits
+
+
+def test_chunked_prefill_linear_time_constant(hgx):
+    """Paper Fig. 9: linear-layer time is fixed for a fixed chunk."""
+    a = hgx.chunked("llama3-70b", chunk=512, decode_batch=16,
+                    use_case="chat", parallelism=dict(tp=8))
+    b = hgx.chunked("llama3-70b", chunk=512, decode_batch=64,
+                    use_case="chat", parallelism=dict(tp=8))
+    lin_a = a.timing.breakdown()["linear"]
+    lin_b = b.timing.breakdown()["linear"]
+    assert abs(lin_a - lin_b) / lin_a < 0.05
+    # attention grows with decode batch
+    assert b.timing.breakdown()["attention"] > a.timing.breakdown()["attention"]
+
+
+def test_speculative_expected_tokens():
+    # paper formula at gamma -> 1 accepts all N
+    assert expected_tokens_per_cycle(4, 1.0) == pytest.approx(4.0)
+    assert expected_tokens_per_cycle(4, 0.0) == pytest.approx(0.0)
+    e = expected_tokens_per_cycle(4, 0.7)
+    assert 1.0 < e < 3.0
+
+
+def test_speculative_helps_with_good_draft(hgx):
+    base = hgx.decode("llama3-70b", use_case="chat", batch=4,
+                      parallelism=dict(tp=8))
+    sd = hgx.speculative("llama3-70b", "llama3-8b", n=4, gamma=0.9,
+                         use_case="chat", batch=4, parallelism=dict(tp=8))
+    assert sd.meta["tokens_per_s"] > base.meta["tokens_per_s"]
+
+
+def test_speculative_hurts_with_bad_draft(hgx):
+    """Paper Fig. 11: N=16, gamma=0.7 is worse than no SD."""
+    base = hgx.decode("llama3-70b", use_case="chat", batch=4,
+                      parallelism=dict(tp=8))
+    sd = hgx.speculative("llama3-70b", "llama3-8b", n=16, gamma=0.7,
+                         use_case="chat", batch=4, parallelism=dict(tp=8))
+    assert sd.meta["tokens_per_s"] < base.meta["tokens_per_s"]
+
+
+def test_speculative_memory_overhead(hgx):
+    sd = hgx.speculative("llama3-70b", "llama3-8b", n=4, gamma=0.9,
+                         use_case="chat", batch=4, parallelism=dict(tp=8))
+    base = hgx.decode("llama3-70b", use_case="chat", batch=4,
+                      parallelism=dict(tp=8))
+    over = sd.memory.total_per_npu / base.memory.total_per_npu
+    assert 1.05 < over < 1.6  # paper: ~10-30% extra
+
+
+# ---------------------------------------------------------------------------
+# Requirements (§VI) + energy
+# ---------------------------------------------------------------------------
+
+def test_requirements_scaling_laws():
+    m = paper_model("llama3-70b")
+    qa = platform_requirements(m, use_case("question_answering", 1))
+    rag = platform_requirements(m, use_case("qa_rag", 1))
+    # RAG has 10x prompt and 2x TTFT budget -> ~5x the compute requirement
+    ratio = rag.compute / qa.compute
+    assert 4.0 < ratio < 6.5
+    # memory capacity grows with the KV cache only
+    assert rag.mem_capacity > qa.mem_capacity
+    assert rag.weights_bytes == qa.weights_bytes
+
+
+def test_moe_bw_requirement_scales_with_active_params():
+    dense = paper_model("gpt3-175b")
+    moe = paper_model("gpt4-1.8t")  # 10x params, ~2x active
+    r_d = platform_requirements(dense, use_case("question_answering", 1))
+    r_m = platform_requirements(moe, use_case("question_answering", 1))
+    assert r_m.mem_bw / r_d.mem_bw < 4.0  # far below the 10x param ratio
+    assert r_m.mem_capacity / r_d.mem_capacity > 8.0
+
+
+def test_power_model_partition():
+    p = PowerModel(100.0)
+    assert p.p_static + p.p_compute + p.p_mem + p.p_icn == pytest.approx(100)
+    assert p.op_energy(1.0, 0, 0, 0) == pytest.approx(p.p_static)
+    assert p.op_energy(1.0, 1, 1, 1) == pytest.approx(100.0)
+
+
+def test_energy_per_token_positive(hgx):
+    rep = hgx.estimate("llama3-8b", use_case="chat", batch=4,
+                       parallelism=dict(tp=8))
+    assert rep.energy_per_token > 0

@@ -1,0 +1,71 @@
+"""Disaggregated serving planner (beyond-paper: the paper's §IX future
+work), built on the GenZ primitives."""
+
+import pytest
+
+from repro.core import GenZ, Optimizations, Workload, paper_model
+from repro.core.disagg import colocated_goodput, plan_disaggregated
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = GenZ.hgx_h100(8)
+    platform = g.platform
+    opt = Optimizations(weight_dtype="fp8", act_dtype="fp8", kv_dtype="fp8")
+    return platform, opt
+
+
+def test_planner_returns_feasible_plans(setup):
+    platform, opt = setup
+    wl = Workload(batch=1, tau_p=8192, tau_d=256, ttft_slo=2.0,
+                  tpot_slo=0.05)
+    plans = plan_disaggregated(paper_model("llama3-8b"), platform, wl, opt,
+                               total_npus=8, tp_options=(1, 2, 4))
+    assert plans, "no feasible disaggregated plan found"
+    best = plans[0]
+    assert best.total_npus <= 8
+    assert best.goodput_rps > 0
+    assert best.kv_transfer_s > 0  # disagg pays the KV hop
+    assert best.meets_slo
+
+
+def test_pool_sizing_balances_stages(setup):
+    """The chosen split should not leave one stage >3x over-provisioned."""
+    platform, opt = setup
+    wl = Workload(batch=1, tau_p=8192, tau_d=512)
+    plans = plan_disaggregated(paper_model("llama3-8b"), platform, wl, opt,
+                               total_npus=16, tp_options=(1, 2, 4))
+    best = plans[0]
+    rate_p = best.n_prefill_groups / best.ttft
+    rate_d = (best.n_decode_groups * best.decode_batch
+              / (wl.tau_d * best.tpot))
+    ratio = max(rate_p, rate_d) / min(rate_p, rate_d)
+    assert ratio < 3.5, (rate_p, rate_d)
+
+
+def test_disagg_beats_colocated_on_long_prompts(setup):
+    """Long prompts + tight TPOT: fused chunked iterations stall decodes,
+    disaggregation doesn't — the crossover the literature reports."""
+    platform, opt = setup
+    wl = Workload(batch=1, tau_p=16384, tau_d=256, tpot_slo=0.02)
+    spec = paper_model("llama3-8b")
+    plans = plan_disaggregated(spec, platform, wl, opt, total_npus=8,
+                               tp_options=(1, 2, 4))
+    co = colocated_goodput(spec, platform, wl, opt, total_npus=8, tp=4,
+                           chunk=512)
+    assert plans
+    best = plans[0]
+    assert best.tpot < co["tpot"], "disagg must decouple TPOT from prefill"
+    assert best.meets_slo and not co["meets_slo"]
+
+
+def test_kv_transfer_scales_with_prompt(setup):
+    platform, opt = setup
+    spec = paper_model("llama3-8b")
+    short = plan_disaggregated(spec, platform,
+                               Workload(batch=1, tau_p=1024, tau_d=128),
+                               opt, total_npus=8, tp_options=(2,))
+    long = plan_disaggregated(spec, platform,
+                              Workload(batch=1, tau_p=16384, tau_d=128),
+                              opt, total_npus=8, tp_options=(2,))
+    assert long[0].kv_transfer_s > 10 * short[0].kv_transfer_s

@@ -1,0 +1,163 @@
+"""Unit tests for the HLO-text cost analyzer (pure parsing, no compiles)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.launch import hlo_cost
+from repro.launch.hlo_cost import (Cost, HloCostModel, is_float_type,
+                                   shape_bytes, shape_elems)
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[2,3]{1,0}") == 24
+    assert shape_bytes("bf16[10]") == 20
+    assert shape_bytes("s8[100]") == 100
+    assert shape_bytes("(f32[2], s32[4])") == 8 + 16
+    assert shape_bytes("pred[]") == 1
+    assert shape_elems("f32[4,5,6]{2,1,0}") == 120
+
+
+def test_is_float_type():
+    assert is_float_type("f32[2,3]")
+    assert is_float_type("bf16[1]")
+    assert not is_float_type("s8[100]")
+    assert not is_float_type("s32[]")
+
+
+HLO = """\
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %y = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%i2, %y)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %lim = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %lim), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%zero, %a)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_while_trip_count_multiplication():
+    cost = hlo_cost.analyze(HLO)
+    # one 8x8x8 dot per iteration, 5 iterations
+    assert cost.flops == pytest.approx(5 * 2 * 8 * 8 * 8, rel=0.2)
+    assert cost.unknown_loops == 0
+
+
+def test_collective_wire_accounting():
+    hlo = """\
+HloModule c
+
+ENTRY %main (a: f32[64,64]) -> f32[64,64] {
+  %a = f32[64,64]{1,0} parameter(0)
+  ROOT %ar = f32[64,64]{1,0} all-reduce(%a), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+}
+"""
+    cost = hlo_cost.analyze(hlo)
+    size = 64 * 64 * 4
+    assert cost.coll_bytes["all-reduce"] == pytest.approx(
+        2 * (7 / 8) * size)
+
+
+def test_iota_replica_groups():
+    hlo = """\
+HloModule c
+
+ENTRY %main (a: f32[128]) -> f32[128] {
+  %a = f32[128]{0} parameter(0)
+  ROOT %ar = f32[128]{0} all-reduce(%a), replica_groups=[8,64]<=[512]T(1,0), to_apply=%add
+}
+"""
+    model = HloCostModel(hlo)
+    cost = model.cost()
+    size = 128 * 4
+    assert cost.coll_bytes["all-reduce"] == pytest.approx(
+        2 * (63 / 64) * size)
+
+
+def test_dynamic_slice_bills_region_not_buffer():
+    hlo = """\
+HloModule d
+
+ENTRY %main (a: f32[100,256], i: s32[]) -> f32[1,256] {
+  %a = f32[100,256]{1,0} parameter(0)
+  %i = s32[] parameter(1)
+  %z = s32[] constant(0)
+  ROOT %ds = f32[1,256]{1,0} dynamic-slice(%a, %i, %z), dynamic_slice_sizes={1,256}
+}
+"""
+    cost = hlo_cost.analyze(hlo)
+    assert cost.bytes == pytest.approx(2 * 1 * 256 * 4)  # region r+w only
+
+
+def test_int_bytes_tracked_separately():
+    """int8-result ops (the quantized KV-cache update path) are exempt from
+    the f32-twin ÷2 normalization; classification is by result dtype."""
+    hlo = """\
+HloModule i
+
+ENTRY %main (c: s8[64,16], t: s8[1,16], i: s32[], b: f32[64,16]) -> s8[64,16] {
+  %c = s8[64,16]{1,0} parameter(0)
+  %t = s8[1,16]{1,0} parameter(1)
+  %i = s32[] parameter(2)
+  %b = f32[64,16]{1,0} parameter(3)
+  %z = s32[] constant(0)
+  %sq = f32[64,16]{1,0} multiply(%b, %b)
+  ROOT %dus = s8[64,16]{1,0} dynamic-update-slice(%c, %t, %i, %z)
+}
+"""
+    cost = hlo_cost.analyze(hlo)
+    assert cost.int_bytes == pytest.approx(2 * 1 * 16)  # DUS region r+w, s8
+    # float multiply traffic halves; the int8 update doesn't
+    assert cost.normalized_bytes(0.5) == pytest.approx(
+        (cost.bytes - cost.int_bytes) * 0.5 + cost.int_bytes)
+    assert cost.normalized_bytes(0.5) > cost.bytes * 0.5
+
+
+@given(dims=st.lists(st.integers(1, 64), min_size=0, max_size=4),
+       dt=st.sampled_from(["f32", "bf16", "s8", "s32", "pred"]))
+@settings(max_examples=50, deadline=None)
+def test_shape_bytes_property(dims, dt):
+    s = f"{dt}[{','.join(map(str, dims))}]"
+    n = 1
+    for d in dims:
+        n *= d
+    assert shape_bytes(s) == n * hlo_cost.DTYPE_BYTES[dt]
+
+
+def test_input_specs_api():
+    """The dry-run's public input_specs() contract: ShapeDtypeStructs with
+    shardings, no device allocation."""
+    import subprocess, sys, os, textwrap
+    from pathlib import Path
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent / "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+        from repro.launch.dryrun import input_specs
+        import jax
+        args = input_specs("qwen1.5-0.5b", "decode_32k")
+        leaves = jax.tree.leaves(args)
+        assert all(isinstance(x, jax.ShapeDtypeStruct) for x in leaves)
+        assert all(x.sharding is not None for x in leaves)
+        assert len(jax.devices()) == 512  # dryrun module forces the fleet
+        print("OK", len(leaves))
+    """)], capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout

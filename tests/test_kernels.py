@@ -1,0 +1,203 @@
+"""Per-kernel validation: shape/dtype sweeps, Pallas (interpret=True) vs the
+pure-jnp oracles in ref.py (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.decode_attention import pallas_decode_attention
+from repro.kernels.flash_attention import pallas_flash_attention
+from repro.kernels.moe_gemm import pallas_expert_gemm
+from repro.kernels.ssm_scan import pallas_rwkv6_scan
+
+
+def t(shape, k, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.key(k), shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+TOL = {jnp.float32: 2e-4, jnp.bfloat16: 4e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention (jnp blockwise + pallas)
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, Sq, Skv, Hq, Hkv, D, causal, window)
+    (2, 64, 64, 4, 4, 16, True, None),
+    (2, 64, 64, 4, 2, 16, True, None),
+    (1, 128, 128, 8, 2, 32, False, None),
+    (2, 64, 64, 4, 4, 16, True, 24),
+    (1, 96, 96, 2, 1, 64, True, None),
+    (3, 32, 32, 6, 3, 8, True, None),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_jnp_vs_oracle(case, dtype):
+    B, Sq, Skv, Hq, Hkv, D, causal, win = case
+    q, k, v = (t((B, Sq, Hq, D), 1, dtype), t((B, Skv, Hkv, D), 2, dtype),
+               t((B, Skv, Hkv, D), 3, dtype))
+    want = ref.mha_reference(q, k, v, causal=causal, window=win)
+    got = kops.multi_head_attention(q, k, v, causal=causal, window=win,
+                                    impl="flash", block_q=16, block_kv=32)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", FLASH_CASES[:4])
+def test_flash_pallas_vs_oracle(case, dtype):
+    B, Sq, Skv, Hq, Hkv, D, causal, win = case
+    q, k, v = (t((B, Sq, Hq, D), 1, dtype), t((B, Skv, Hkv, D), 2, dtype),
+               t((B, Skv, Hkv, D), 3, dtype))
+    want = ref.mha_reference(q, k, v, causal=causal, window=win)
+    got = pallas_flash_attention(q, k, v, causal=causal, window=win,
+                                 block_q=32, block_kv=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_flash_gradients_match_direct():
+    B, S, Hq, Hkv, D = 2, 64, 4, 2, 16
+    q, k, v = t((B, S, Hq, D), 1), t((B, S, Hkv, D), 2), t((B, S, Hkv, D), 3)
+
+    def loss(impl):
+        def f(q, k, v):
+            o = kops.multi_head_attention(q, k, v, impl=impl, block_q=16,
+                                          block_kv=16)
+            return jnp.sum(jnp.sin(o))
+        return jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+
+    for a, b in zip(loss("direct"), loss("flash")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_flash_chunked_offsets():
+    """Chunked prefill: per-request q_offset + kv_len masks."""
+    B, Skv, Hq, Hkv, D = 2, 96, 4, 2, 16
+    q = t((B, 48, Hq, D), 1)
+    k, v = t((B, Skv, Hkv, D), 2), t((B, Skv, Hkv, D), 3)
+    kv_len = jnp.array([80, 60])
+    q_off = jnp.array([32, 12])
+    want = ref.mha_reference(q, k, v, causal=True, kv_len=kv_len,
+                             q_offset=q_off)
+    got = kops.multi_head_attention(q, k, v, causal=True, kv_len=kv_len,
+                                    q_offset=q_off, impl="flash",
+                                    block_q=16, block_kv=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_flash_causal_skip_matches():
+    B, S, H, D = 1, 128, 2, 16
+    q, k, v = t((B, S, H, D), 1), t((B, S, H, D), 2), t((B, S, H, D), 3)
+    base = kops.multi_head_attention(q, k, v, impl="flash", block_q=32,
+                                     block_kv=32)
+    skip = kops.multi_head_attention(q, k, v, impl="flash", block_q=32,
+                                     block_kv=32, causal_skip=True)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(skip), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,Hq,Hkv,D,bk", [
+    (3, 96, 8, 2, 16, 32), (1, 64, 4, 4, 32, 16), (2, 128, 16, 8, 8, 64),
+])
+def test_decode_kernel_vs_oracle(B, T, Hq, Hkv, D, bk, dtype):
+    q = t((B, 1, Hq, D), 1, dtype)
+    k, v = t((B, T, Hkv, D), 2, dtype), t((B, T, Hkv, D), 3, dtype)
+    lengths = jnp.arange(1, B + 1) * (T // (B + 1)) + 1
+    want = ref.mha_reference(q, k, v, causal=False, kv_len=lengths,
+                             q_offset=lengths - 1)
+    got = pallas_decode_attention(q, k, v, lengths=lengths, block_kv=bk,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 scan kernel + chunked recurrence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,H,N,chunk", [
+    (2, 48, 3, 8, 16), (1, 33, 2, 16, 8), (2, 64, 1, 4, 64),
+])
+def test_rwkv6_pallas_vs_oracle(B, T, H, N, chunk):
+    r, k, v = (t((B, T, H, N), 4, scale=0.5), t((B, T, H, N), 5, scale=0.5),
+               t((B, T, H, N), 6, scale=0.5))
+    w = jax.nn.sigmoid(t((B, T, H, N), 7)) * 0.5 + 0.45
+    u = t((H, N), 8, scale=0.3)
+    s0 = t((B, H, N, N), 9, scale=0.2)
+    want_o, want_s = ref.rwkv6_reference(r, k, v, w, u, s0)
+    got_o, got_s = pallas_rwkv6_scan(r, k, v, w, u, s0, chunk=chunk,
+                                     interpret=True)
+    np.testing.assert_allclose(np.asarray(got_o), np.asarray(want_o),
+                               atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_rwkv6_chunked_scan_matches_and_is_differentiable():
+    B, T, H, N = 1, 40, 2, 8
+    r, k, v = (t((B, T, H, N), 4, scale=0.5), t((B, T, H, N), 5, scale=0.5),
+               t((B, T, H, N), 6, scale=0.5))
+    w = jax.nn.sigmoid(t((B, T, H, N), 7)) * 0.5 + 0.45
+    u = t((H, N), 8, scale=0.3)
+    s0 = jnp.zeros((B, H, N, N))
+    want, _ = ref.rwkv6_reference(r, k, v, w, u, s0)
+    got, _ = kops.rwkv6_scan(r, k, v, w, u, s0, chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+    def f(r):
+        o, _ = kops.rwkv6_scan(r, k, v, w, u, s0, chunk=16)
+        return jnp.sum(o * o)
+
+    g = jax.grad(f)(r)
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+# ---------------------------------------------------------------------------
+# Mamba scan
+# ---------------------------------------------------------------------------
+
+def test_mamba_chunked_matches_reference():
+    B, T, Di, N = 2, 50, 8, 4
+    x, dt = t((B, T, Di), 1, scale=0.5), jax.nn.softplus(t((B, T, Di), 2))
+    a = -jnp.exp(t((Di, N), 3, scale=0.1))
+    b, c = t((B, T, N), 4, scale=0.5), t((B, T, N), 5, scale=0.5)
+    d = t((Di,), 6)
+    s0 = t((B, Di, N), 7, scale=0.1)
+    want_y, want_s = ref.mamba_scan_reference(x, dt, a, b, c, d, s0)
+    got_y, got_s = kops.mamba_scan(x, dt, a, b, c, d, s0, chunk=16)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE expert GEMM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,D,F,bc,bf", [
+    (4, 40, 24, 56, 16, 16), (2, 16, 32, 32, 16, 32), (8, 8, 8, 8, 8, 8),
+])
+def test_moe_gemm_vs_oracle(E, C, D, F, bc, bf, dtype):
+    x, w = t((E, C, D), 10, dtype), t((E, D, F), 11, dtype)
+    want = ref.moe_gemm_reference(x, w)
+    got = pallas_expert_gemm(x, w, block_c=bc, block_f=bf, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])

@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Collective, NetworkDim, Optimizations,
+                        ParallelismConfig, paper_model)
+from repro.core.network import collective_time_1d
+from repro.core.profiler import PassSpec, model_ops, pass_flops, pass_bytes
+from repro.core.stages import expected_tokens_per_cycle
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.training.compression import compress_roundtrip
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(n=st.integers(2, 512), size=st.floats(1e3, 1e12),
+       bw=st.floats(1e9, 1e13), lat=st.floats(1e-7, 1e-4))
+@settings(**SETTINGS)
+def test_collective_times_positive_and_monotone_in_size(n, size, bw, lat):
+    dim = NetworkDim("x", n, bw, lat)
+    for kind in Collective:
+        t1 = collective_time_1d(kind, size, dim)
+        t2 = collective_time_1d(kind, size * 2, dim)
+        assert t1 > 0
+        assert t2 >= t1
+
+
+@given(n=st.integers(1, 16), gamma=st.floats(0.0, 1.0))
+@settings(**SETTINGS)
+def test_spec_decode_expected_tokens_bounded(n, gamma):
+    e = expected_tokens_per_cycle(n, gamma)
+    assert -1e-9 <= e <= n + 1e-9
+
+
+@given(batch=st.integers(1, 64), seq=st.integers(16, 4096),
+       tp=st.sampled_from([1, 2, 4, 8]))
+@settings(**SETTINGS)
+def test_profiler_flops_scale_linearly_with_tokens(batch, seq, tp):
+    spec = paper_model("llama3-8b")
+    par = ParallelismConfig(tp=tp)
+    opt = Optimizations()
+    f1 = pass_flops(model_ops(spec, PassSpec(batch, seq, seq, True), par,
+                              opt, head_q_len=1))
+    f2 = pass_flops(model_ops(spec, PassSpec(batch * 2, seq, seq, True), par,
+                              opt, head_q_len=1))
+    np.testing.assert_allclose(f2 / f1, 2.0, rtol=0.02)
+
+
+@given(tp=st.sampled_from([1, 2, 4, 8, 16]))
+@settings(**SETTINGS)
+def test_tensor_parallel_divides_work(tp):
+    spec = paper_model("llama3-70b")
+    opt = Optimizations()
+    base = pass_flops(model_ops(spec, PassSpec(1, 1024, 1024, True),
+                                ParallelismConfig(), opt))
+    shard = pass_flops(model_ops(spec, PassSpec(1, 1024, 1024, True),
+                                 ParallelismConfig(tp=tp), opt))
+    # per-NPU flops shrink ~1/tp (padding allows small overshoot)
+    assert shard <= base / tp * 1.25 + 1e6
+
+
+@given(seed=st.integers(0, 1000), sq=st.sampled_from([16, 33, 64]),
+       hkv=st.sampled_from([1, 2, 4]), g=st.sampled_from([1, 2, 3]))
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_matches_oracle_property(seed, sq, hkv, g):
+    hq = hkv * g
+    d = 8
+    kq = jax.random.key(seed)
+    ks = jax.random.split(kq, 3)
+    q = jax.random.normal(ks[0], (1, sq, hq, d))
+    k = jax.random.normal(ks[1], (1, sq, hkv, d))
+    v = jax.random.normal(ks[2], (1, sq, hkv, d))
+    want = ref.mha_reference(q, k, v, causal=True)
+    got = kops.multi_head_attention(q, k, v, impl="flash", block_q=16,
+                                    block_kv=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+
+@given(seed=st.integers(0, 100), n=st.sampled_from([100, 1000, 5000]),
+       scale=st.floats(1e-4, 1e3))
+@settings(**SETTINGS)
+def test_int8_compression_error_bounded(seed, n, scale):
+    x = jax.random.normal(jax.random.key(seed), (n,)) * scale
+    y = compress_roundtrip(x, chunk=256)
+    # per-chunk max error is scale_chunk/2 = max|x_chunk|/254
+    err = np.max(np.abs(np.asarray(x - y)))
+    assert err <= float(jnp.max(jnp.abs(x))) / 127 + 1e-9
+
+
+@given(b=st.integers(1, 3), t=st.integers(1, 30))
+@settings(max_examples=10, deadline=None)
+def test_rwkv_state_linearity(b, t):
+    """The WKV recurrence is linear in the initial state."""
+    h, n = 2, 4
+    ks = jax.random.split(jax.random.key(t), 6)
+    r = jax.random.normal(ks[0], (b, t, h, n)) * 0.5
+    k = jax.random.normal(ks[1], (b, t, h, n)) * 0.5
+    v = jax.random.normal(ks[2], (b, t, h, n)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, n))) * 0.5 + 0.4
+    u = jax.random.normal(ks[4], (h, n)) * 0.3
+    s1 = jax.random.normal(ks[5], (b, h, n, n)) * 0.2
+    o0, f0 = ref.rwkv6_reference(r, k, v, w, u, jnp.zeros_like(s1))
+    o1, f1 = ref.rwkv6_reference(r, k, v, w, u, s1)
+    o2, f2 = ref.rwkv6_reference(r, k, v, w, u, 2 * s1)
+    np.testing.assert_allclose(np.asarray(o2 - o0),
+                               np.asarray(2 * (o1 - o0)), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f2 - f0),
+                               np.asarray(2 * (f1 - f0)), atol=1e-4)
+
+
+@given(shape_seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_kv_cache_bytes_monotone(shape_seed):
+    rng = np.random.default_rng(shape_seed)
+    spec = paper_model("llama3-8b")
+    b = int(rng.integers(1, 64))
+    tp_ = int(rng.integers(100, 10000))
+    td = int(rng.integers(10, 2000))
+    small = spec.kv_cache_bytes(b, tp_, td)
+    bigger = spec.kv_cache_bytes(b + 1, tp_ + 100, td + 10)
+    assert bigger > small

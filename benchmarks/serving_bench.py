@@ -1,0 +1,159 @@
+#!/usr/bin/env python
+"""Serving benchmark: request-rate × prompt-length-mix sweep over the
+rebuilt ServeEngine, emitting JSON so successive PRs have a serving perf
+trajectory (tokens/s, TTFT, TPOT, slot occupancy per cell).
+
+    PYTHONPATH=src python benchmarks/serving_bench.py            # full sweep
+    PYTHONPATH=src python benchmarks/serving_bench.py --smoke    # CI smoke
+    PYTHONPATH=src python benchmarks/serving_bench.py --out r.json
+
+Open-loop driver: arrivals are Poisson at the offered rate; requests are
+submitted when wall-clock passes their arrival time, and the engine steps
+whenever it has work.  One engine instance is reused across cells (same
+jitted programs — only chunk widths retrace), with metrics reset per cell.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import EngineConfig, EngineMetrics, Request, ServeEngine
+
+MIXES = {
+    "short": (4, 16),
+    "mixed": (4, 48),
+    "long": (48, 96),
+}
+
+
+def build_tiny_model():
+    from repro.core.modelspec import AttnSpec, ModelSpec
+    from repro.models import build_model
+    spec = ModelSpec(name="bench-tiny", d_model=64, n_layers=2, n_heads=4,
+                     n_kv_heads=2, d_head=16, d_ff=128, vocab=256,
+                     attn=AttnSpec(kind="full", causal=True))
+    model = build_model(spec, mesh=None, param_dtype=jnp.float32,
+                        compute_dtype=jnp.float32)
+    return spec, model, model.init(jax.random.key(0))
+
+
+def build_arch_model(arch: str):
+    from repro.configs import registry
+    from repro.models import build_model
+    spec = registry.get_reduced(arch)
+    model = build_model(spec, mesh=None, param_dtype=jnp.float32,
+                        compute_dtype=jnp.float32)
+    return spec, model, model.init(jax.random.key(0))
+
+
+def run_cell(eng: ServeEngine, vocab: int, rate: float, mix: str,
+             n_requests: int, max_new: int, seed: int) -> dict:
+    """One sweep cell: Poisson arrivals at ``rate`` req/s, prompt lengths
+    uniform in MIXES[mix]."""
+    rng = np.random.default_rng(seed)
+    lo, hi = MIXES[mix]
+    prompts = [[int(t) for t in rng.integers(0, vocab,
+                                             size=int(rng.integers(lo, hi)))]
+               for _ in range(n_requests)]
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    reqs = [Request(prompt=p, max_new_tokens=max_new) for p in prompts]
+
+    eng.metrics = EngineMetrics()  # per-cell metrics window
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(reqs) or eng.queue or eng.active or eng._prefilling:
+        now = time.perf_counter() - t0
+        while i < len(reqs) and arrivals[i] <= now:
+            eng.submit(reqs[i])
+            i += 1
+        if not (eng.queue or eng.active or eng._prefilling):
+            time.sleep(min(max(arrivals[i] - now, 0.0), 0.05))
+            continue
+        eng.step()
+    wall = time.perf_counter() - t0
+
+    assert all(r.state == "done" for r in reqs)
+    cell = {"rate_req_s": rate, "mix": mix, "n_requests": n_requests,
+            "max_new_tokens": max_new, "cell_wall_s": wall,
+            "prompt_tokens": sum(len(p) for p in prompts)}
+    cell.update(eng.metrics.summary(reqs))
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="registry arch (default: inline tiny model)")
+    ap.add_argument("--rates", type=float, nargs="+",
+                    default=[2.0, 8.0, 32.0])
+    ap.add_argument("--mixes", nargs="+", default=list(MIXES),
+                    choices=list(MIXES))
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prefill-rows", type=int, default=2)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI: one rate, two mixes")
+    ap.add_argument("--out", default=None, help="write JSON here too")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.rates = [16.0]
+        args.mixes = ["short", "mixed"]
+        args.requests = 6
+        args.max_new = 8
+
+    spec, model, params = (build_arch_model(args.arch) if args.arch
+                           else build_tiny_model())
+    cfg = EngineConfig(max_slots=args.slots, max_seq=args.max_seq,
+                       chunk_size=args.chunk,
+                       prefill_rows=args.prefill_rows)
+    eng = ServeEngine(model, params, cfg, rng=jax.random.key(1))
+    # warm the jitted programs so cell 0 isn't all compile time
+    eng.serve([Request(prompt=[1, 2, 3, 4, 5], max_new_tokens=2)])
+
+    cells = []
+    for mix in args.mixes:
+        for rate in args.rates:
+            cell = run_cell(eng, spec.vocab, rate, mix, args.requests,
+                            args.max_new, args.seed)
+            cells.append(cell)
+            print(f"  {mix:>6} @ {rate:6.1f} req/s: "
+                  f"{cell['tokens_per_s']:8.1f} tok/s | "
+                  f"ttft p50 {cell.get('ttft_s_p50', 0) * 1e3:7.1f} ms "
+                  f"p95 {cell.get('ttft_s_p95', 0) * 1e3:7.1f} ms | "
+                  f"tpot {cell.get('tpot_s_mean', 0) * 1e3:6.1f} ms | "
+                  f"occ {cell['mean_slot_occupancy']:.2f}",
+                  file=sys.stderr)
+
+    report = {
+        "bench": "serving_bench",
+        "arch": args.arch or "bench-tiny",
+        "engine": {"max_slots": args.slots, "chunk_size": args.chunk,
+                   "prefill_rows": args.prefill_rows,
+                   "max_seq": args.max_seq},
+        "smoke": args.smoke,
+        "cells": cells,
+    }
+    text = json.dumps(report, indent=2)
+    print(text)
+    if args.out:
+        Path(args.out).write_text(text)
+        print(f"wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 gate + serving perf smoke, in one command:
+#   scripts/ci.sh
+# Regressions in either the test suite or the serving hot path show up here.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== serving benchmark (smoke) =="
+python benchmarks/serving_bench.py --smoke > /dev/null
+
+echo "CI OK"

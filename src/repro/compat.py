@@ -1,0 +1,100 @@
+"""JAX version-compatibility layer.
+
+The repo targets the current JAX API surface but must run on 0.4.x
+installs (this image ships 0.4.37).  Three API families moved between
+0.4 and 0.5+:
+
+  * ``shard_map``  — lived in ``jax.experimental.shard_map``, now
+    ``jax.shard_map``; the replication-check kwarg was renamed
+    ``check_rep`` -> ``check_vma``.
+  * mesh creation — ``jax.make_mesh`` grew an ``axis_types=`` kwarg and
+    ``jax.sharding.AxisType`` only exists on 0.5+.
+  * ``jax.tree``  — the namespace alias for ``jax.tree_util`` is absent
+    on very old 0.4.x releases.
+
+Import from here instead of ``jax`` directly::
+
+    from ..compat import shard_map, make_mesh, tree
+
+Keeping every version probe in one module means call sites stay on the
+modern spelling and never branch on ``jax.__version__`` themselves.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "make_mesh", "tree"]
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+try:  # jax >= 0.6: promoted to the top-level namespace
+    from jax import shard_map as _raw_shard_map  # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _raw_shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = False):
+    """``shard_map`` with a stable replication-check spelling.
+
+    ``check_rep`` maps onto whichever of ``check_rep`` / ``check_vma``
+    this JAX understands (the kwarg was renamed in 0.8).
+    """
+    try:
+        return _raw_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=check_rep)
+    except TypeError:
+        return _raw_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_rep)
+
+
+# ---------------------------------------------------------------------------
+# mesh construction
+# ---------------------------------------------------------------------------
+
+def make_mesh(shape, axes):
+    """Build a device mesh, requesting Auto axis types where supported.
+
+    On JAX 0.5+ the mesh is created with ``AxisType.Auto`` for every axis
+    (the pre-0.5 default behavior); on 0.4.x — where ``AxisType`` does not
+    exist and ``jax.make_mesh`` rejects ``axis_types=`` — the plain call
+    is used, which has identical semantics.
+    """
+    shape, axes = tuple(shape), tuple(axes)
+    if hasattr(jax, "make_mesh"):
+        try:
+            from jax.sharding import AxisType
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(AxisType.Auto,) * len(axes))
+        except (ImportError, TypeError):
+            return jax.make_mesh(shape, axes)
+    # pre-0.4.35 fallback: no jax.make_mesh at all
+    from jax.experimental import mesh_utils
+    from jax.sharding import Mesh
+    return Mesh(mesh_utils.create_device_mesh(shape), axes)
+
+
+# ---------------------------------------------------------------------------
+# jax.tree namespace
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "tree") and hasattr(jax.tree, "map"):
+    tree = jax.tree
+else:  # very old 0.4.x: only jax.tree_util exists
+    from jax import tree_util as _tu
+
+    class _TreeShim:
+        """Minimal ``jax.tree`` stand-in backed by ``jax.tree_util``."""
+
+        map = staticmethod(_tu.tree_map)
+        leaves = staticmethod(_tu.tree_leaves)
+        flatten = staticmethod(_tu.tree_flatten)
+        unflatten = staticmethod(_tu.tree_unflatten)
+        structure = staticmethod(_tu.tree_structure)
+        reduce = staticmethod(_tu.tree_reduce)
+        all = staticmethod(_tu.tree_all)
+
+    tree = _TreeShim()

@@ -224,7 +224,26 @@ class HloCostModel:
                     break
                 depth -= 1
         ops = rest[:end]
-        return [o.strip().lstrip("%") for o in ops.split(",") if o.strip()]
+        # Split on top-level commas only: older XLA dumps print typed
+        # operands ("dot(f32[32,256]{1,0} %a, ...)") whose dims/layouts
+        # contain commas inside []/{}; the operand name is then the
+        # trailing %-token of each piece.
+        parts: list[str] = []
+        buf: list[str] = []
+        depth = 0
+        for ch in ops:
+            if ch in "[{(":
+                depth += 1
+            elif ch in "]})":
+                depth -= 1
+            if ch == "," and depth == 0:
+                parts.append("".join(buf))
+                buf = []
+            else:
+                buf.append(ch)
+        parts.append("".join(buf))
+        return [p.split()[-1].lstrip("%") for p in (s.strip() for s in parts)
+                if p]
 
     def _operand_bytes(self, comp: str, rest: str) -> float:
         total = 0.0

@@ -28,8 +28,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
+from ..compat import shard_map
 from ..core.modelspec import ModelSpec
 from .common import KeyGen, ModelContext, activation, dense_init, rms_norm
 from .mlp import init_mlp, mlp_axes, mlp_block
@@ -244,12 +244,8 @@ def _moe_shardmap(spec: ModelSpec, ctx: ModelContext, params: dict,
 
     body = functools.partial(_moe_shardmap_body, spec, e_local, c_send,
                              c_cap, m_sz, partition, "model")
-    try:  # jax >= 0.8 renamed check_rep -> check_vma
-        fn = shard_map(body, mesh=mesh, in_specs=(param_specs, x_spec),
-                       out_specs=x_spec, check_vma=False)
-    except TypeError:
-        fn = shard_map(body, mesh=mesh, in_specs=(param_specs, x_spec),
-                       out_specs=x_spec, check_rep=False)
+    fn = shard_map(body, mesh=mesh, in_specs=(param_specs, x_spec),
+                   out_specs=x_spec, check_rep=False)
     return fn(body_params, h)
 
 

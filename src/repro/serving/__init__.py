@@ -1,6 +1,6 @@
-"""Serving substrate: continuous-batching engine, chunked prefill,
-speculative decoding, beam search, sampling."""
+"""Serving substrate: continuous-batching engine (batched chunked prefill,
+device-side sampling), speculative decoding, beam search, sampling."""
 
-from .engine import EngineConfig, Request, ServeEngine
+from .engine import EngineConfig, EngineMetrics, Request, ServeEngine
 
-__all__ = ["EngineConfig", "Request", "ServeEngine"]
+__all__ = ["EngineConfig", "EngineMetrics", "Request", "ServeEngine"]

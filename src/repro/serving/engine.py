@@ -3,19 +3,49 @@
 Slot-based continuous batching in the JetStream style: a fixed pool of
 decode slots shares one device-resident KV cache; prompts are prefilled in
 ``chunk_size`` pieces (chunked prefill, paper §IV-A — bounds the decode
-stall between chunks) into a single-slot scratch cache and inserted into a
-free slot; every engine step advances all active slots by one token.
-Finished requests free their slot immediately, so new prompts join without
-draining the batch (Orca-style iteration-level scheduling).
+stall between chunks) and inserted into a free slot; every engine step
+advances all active slots by one token.  Finished requests free their slot
+immediately, so new prompts join without draining the batch (Orca-style
+iteration-level scheduling).
 
-All device work happens in three jitted functions (prefill_chunk, insert,
-decode); the scheduler is pure Python and therefore easy to fault-inject
+Hot-path design (the batched rebuild):
+
+  * **One jitted decode+sample per step.**  ``decode_step`` and the per-slot
+    sampler are fused into a single jitted call that advances *all* slots
+    and samples them on device; the engine performs exactly one
+    device->host transfer per decode step (the (B,) sampled-token vector) —
+    logits never leave the device.  Per-slot sampling parameters ride along
+    as (B,) arrays, so mixed greedy/stochastic batches share one trace.
+  * **Active-slot mask, no retracing.**  Slot occupancy is tracked on the
+    host; freed slots keep decoding garbage rows (their outputs are simply
+    ignored), so shapes are static and nothing retraces as requests come
+    and go.  Sequence lengths are mirrored on the host, so stop conditions
+    need no device sync.
+  * **Concurrent chunked prefills.**  The scratch cache has
+    ``prefill_rows`` rows; every in-flight prompt owns a row and all rows
+    at the same chunk width advance through one batched ``prefill_chunk``
+    call.  A row mask selects, per row, between the advanced and previous
+    scratch state, so rows at different widths (e.g. a final partial
+    chunk) never corrupt each other and the batched call's shapes depend
+    only on the chunk width — exactly the trace profile of the
+    single-prefill engine.  First tokens for completing prompts are
+    sampled on device in one batched call.
+  * **Greedy admission under decode_priority.**  The scheduler admits
+    queued prompts into free prefill rows whenever a decode slot is
+    guaranteed at completion; ``decode_priority`` orders decode before
+    prefill chunks within a step (SLO order).
+
+Wall-clock and step-level metrics (TTFT, TPOT, tokens/s, slot occupancy)
+accumulate in ``engine.metrics``; see ``EngineMetrics.summary``.
+
+The scheduler itself stays pure Python and therefore easy to fault-inject
 and test.
 """
 
 from __future__ import annotations
 
 import itertools
+import time
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -23,8 +53,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import tree
 from ..models.model import Model, ModelCache
-from .sampling import SamplingConfig, sample
+from .sampling import SamplingConfig, sample_slots
 
 
 @dataclass
@@ -40,6 +71,20 @@ class Request:
     slot: int = -1
     ttft_steps: int = 0  # engine steps until first token (TTFT proxy)
     tpot_steps: int = 0
+    submit_t: float = 0.0  # wall-clock timestamps (perf_counter)
+    first_token_t: float = 0.0
+    finish_t: float = 0.0
+
+    @property
+    def ttft_s(self) -> float:
+        return max(self.first_token_t - self.submit_t, 0.0)
+
+    @property
+    def tpot_s(self) -> float:
+        n = len(self.output) - 1
+        if n <= 0 or self.finish_t <= self.first_token_t:
+            return 0.0
+        return (self.finish_t - self.first_token_t) / n
 
 
 @dataclass(frozen=True)
@@ -48,11 +93,69 @@ class EngineConfig:
     max_seq: int = 512
     chunk_size: int = 128
     decode_priority: bool = True  # decode before prefill chunks (SLO order)
+    prefill_rows: int = 2  # concurrent chunked prefills (scratch rows)
+    record_step_log: bool = False  # keep a per-step occupancy trace
+
+
+@dataclass
+class EngineMetrics:
+    """Wall-clock + step-level serving metrics."""
+
+    decode_steps: int = 0
+    prefill_calls: int = 0
+    prefill_tokens: int = 0
+    generated_tokens: int = 0
+    start_t: float = 0.0
+    end_t: float = 0.0
+    occupancy_sum: float = 0.0  # sum over steps of active/max_slots
+    steps: int = 0
+    step_log: list = field(default_factory=list)  # (step, active, prefill, queued)
+
+    @property
+    def wall_s(self) -> float:
+        return max(self.end_t - self.start_t, 0.0)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.generated_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / self.steps if self.steps else 0.0
+
+    def summary(self, requests=None) -> dict:
+        out = {
+            "steps": self.steps,
+            "decode_steps": self.decode_steps,
+            "prefill_calls": self.prefill_calls,
+            "prefill_tokens": self.prefill_tokens,
+            "generated_tokens": self.generated_tokens,
+            "wall_s": self.wall_s,
+            "tokens_per_s": self.tokens_per_s,
+            "mean_slot_occupancy": self.mean_occupancy,
+        }
+        done = [r for r in (requests or []) if r.state == "done"]
+        if done:
+            ttfts = sorted(r.ttft_s for r in done)
+            tpots = [r.tpot_s for r in done if r.tpot_s > 0]
+            out["requests_done"] = len(done)
+            out["ttft_s_mean"] = sum(ttfts) / len(ttfts)
+            out["ttft_s_p50"] = ttfts[len(ttfts) // 2]
+            out["ttft_s_p95"] = ttfts[min(int(len(ttfts) * 0.95),
+                                          len(ttfts) - 1)]
+            out["tpot_s_mean"] = (sum(tpots) / len(tpots)) if tpots else 0.0
+        return out
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, config: EngineConfig,
                  rng: jax.Array | None = None):
+        if config.max_slots < 1:
+            raise ValueError("EngineConfig.max_slots must be >= 1")
+        if config.prefill_rows < 1:
+            raise ValueError("EngineConfig.prefill_rows must be >= 1")
+        if config.chunk_size < 1:
+            raise ValueError("EngineConfig.chunk_size must be >= 1")
         self.model = model
         self.params = params
         self.cfg = config
@@ -61,111 +164,260 @@ class ServeEngine:
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}  # slot -> request
         self.free_slots = list(range(config.max_slots))
+        self.finished: list[Request] = []
         self.steps = 0
+        self.metrics = EngineMetrics()
 
         self.cache = model.init_cache(config.max_slots, config.max_seq)
-        self.scratch = model.init_cache(1, config.max_seq)
+        self.scratch = model.init_cache(config.prefill_rows, config.max_seq)
+        # prefill bookkeeping: scratch row -> in-flight request / position
+        self._prefills: dict[int, Request] = {}
+        self._prefill_pos: dict[int, int] = {}
+        self._free_rows = list(range(config.prefill_rows))
+
+        # host mirrors (np, never synced from device): next-token feed,
+        # per-slot sampling params, per-slot sequence lengths
         self._tokens = np.zeros((config.max_slots, 1), np.int32)
+        self._temps = np.zeros((config.max_slots,), np.float32)
+        self._topks = np.zeros((config.max_slots,), np.int32)
+        self._topps = np.ones((config.max_slots,), np.float32)
+        self._lengths = np.zeros((config.max_slots,), np.int64)
+        # device copy of (temps, topks, topps): they only change on slot
+        # churn, so cache the upload and invalidate on insert
+        self._dev_sampling = None
 
-        self._jit_chunk = jax.jit(model.prefill_chunk)
-        self._jit_decode = jax.jit(model.decode_step)
-        self._jit_insert = jax.jit(self._insert, donate_argnums=(0,),
-                                   static_argnames=("slot",))
+        self._jit_decode = jax.jit(self._decode_and_sample,
+                                   donate_argnums=(1,))
+        self._jit_prefill = jax.jit(self._prefill_masked,
+                                    donate_argnums=(1,))
+        self._jit_insert = jax.jit(self._insert, donate_argnums=(0,))
+        self._jit_reset_row = jax.jit(self._reset_row, donate_argnums=(0,))
+        self._jit_sample = jax.jit(sample_slots)
 
-    # -- cache slot insertion -------------------------------------------------
+    # -- jitted device functions ---------------------------------------------
+    def _decode_and_sample(self, params, cache: ModelCache, tokens, step_key,
+                           temps, topks, topps):
+        """All slots: one decode step + on-device per-slot sampling.  The
+        (B,) token vector is the only thing the host ever pulls back."""
+        logits, new_cache = self.model.decode_step(params, cache, tokens)
+        keys = jax.random.split(step_key, self.cfg.max_slots)
+        toks = sample_slots(logits, keys, temps, topks, topps)
+        return toks, new_cache
+
+    def _prefill_masked(self, params, scratch: ModelCache, tokens, mask):
+        """Batched chunked prefill over all scratch rows; ``mask`` selects,
+        per row, the advanced state — unmasked rows (idle, or mid-prefill at
+        a different chunk width) keep their previous state untouched."""
+        logits, new = self.model.prefill_chunk(params, scratch, tokens)
+
+        def sel(n, o):
+            m = mask.reshape((1, mask.shape[0]) + (1,) * (n.ndim - 2))
+            return jnp.where(m, n, o)
+
+        layers = tree.map(sel, new.layers, scratch.layers)
+        lengths = jnp.where(mask, new.lengths, scratch.lengths)
+        return logits, ModelCache(layers=layers, lengths=lengths)
+
     @staticmethod
-    def _insert(big: ModelCache, small: ModelCache, slot: int) -> ModelCache:
+    def _insert(big: ModelCache, small: ModelCache, slot, row) -> ModelCache:
+        """Copy scratch row ``row`` into decode-cache slot ``slot``.  Both
+        indices are traced scalars, so every (slot, row) pair shares one
+        compiled program."""
         def ins(b, s):
-            # leaves: (R, B, ...) vs (R, 1, ...)
+            # leaves: (L, B, ...) vs (L, R, ...); batch is dim 1
+            col = jax.lax.dynamic_slice_in_dim(s, row, 1, axis=1)
             idx = (0, slot) + (0,) * (b.ndim - 2)
-            return jax.lax.dynamic_update_slice(b, s.astype(b.dtype), idx)
+            return jax.lax.dynamic_update_slice(b, col.astype(b.dtype), idx)
 
-        layers = jax.tree.map(ins, big.layers, small.layers)
-        lengths = big.lengths.at[slot].set(small.lengths[0])
+        layers = tree.map(ins, big.layers, small.layers)
+        length = jax.lax.dynamic_slice_in_dim(small.lengths, row, 1, axis=0)
+        lengths = jax.lax.dynamic_update_slice(big.lengths, length, (slot,))
+        return ModelCache(layers=layers, lengths=lengths)
+
+    @staticmethod
+    def _reset_row(scratch: ModelCache, row) -> ModelCache:
+        """Zero one scratch row (claimed by a newly admitted prompt)."""
+        def z(b):
+            upd = jnp.zeros(b.shape[:1] + (1,) + b.shape[2:], b.dtype)
+            idx = (0, row) + (0,) * (b.ndim - 2)
+            return jax.lax.dynamic_update_slice(b, upd, idx)
+
+        layers = tree.map(z, scratch.layers)
+        lengths = jax.lax.dynamic_update_slice(
+            scratch.lengths, jnp.zeros((1,), scratch.lengths.dtype), (row,))
         return ModelCache(layers=layers, lengths=lengths)
 
     # -- public API --------------------------------------------------------------
     def submit(self, req: Request) -> int:
         req.rid = next(self._ids)
         req.state = "queued"
+        req.submit_t = time.perf_counter()
         self.queue.append(req)
         return req.rid
 
-    def _start_prefill(self, req: Request) -> None:
-        self._prefill_req = req
-        self._prefill_pos = 0
-        self.scratch = jax.tree.map(jnp.zeros_like, self.scratch)
-        req.state = "prefill"
+    # -- scheduling ----------------------------------------------------------
+    def _admit(self) -> None:
+        """Greedily start prefills: every free scratch row takes a queued
+        prompt, as long as a decode slot is guaranteed at completion."""
+        while (self.queue and self._free_rows
+               and len(self.active) + len(self._prefills)
+               < self.cfg.max_slots):
+            req = self.queue.popleft()
+            row = self._free_rows.pop()
+            self._prefills[row] = req
+            self._prefill_pos[row] = 0
+            req.state = "prefill"
+            self.scratch = self._jit_reset_row(self.scratch, jnp.int32(row))
 
+    # -- prefill --------------------------------------------------------------
     def _prefill_step(self) -> None:
-        """Process one chunk of the in-flight prefill.  The final chunk runs
-        at its exact width (no padding), which keeps SSM states and token-
-        shift caches exact for every architecture family."""
-        req = self._prefill_req
-        c = self.cfg.chunk_size
-        lo = self._prefill_pos
-        hi = min(lo + c, len(req.prompt))
-        chunk = np.asarray(req.prompt[lo:hi], np.int32)[None, :]
-        logits, self.scratch = self._jit_chunk(self.params, self.scratch,
-                                               jnp.asarray(chunk))
-        self._prefill_pos = hi
-        if self._prefill_pos >= len(req.prompt):
-            # prompt complete: sample the first token, claim a slot
-            self.rng, k = jax.random.split(self.rng)
-            tok = int(sample(logits, k, req.sampling)[0])
+        """Advance every in-flight prefill by one chunk.  Rows are grouped
+        by this step's chunk width (the final chunk runs at its exact width
+        — no padding — which keeps SSM states and token-shift caches exact
+        for every architecture family); each group advances in one batched
+        call."""
+        if not self._prefills:
+            return
+        groups: dict[int, list[int]] = {}
+        for row in sorted(self._prefills):
+            req = self._prefills[row]
+            w = min(self.cfg.chunk_size,
+                    len(req.prompt) - self._prefill_pos[row])
+            groups.setdefault(w, []).append(row)
+        for w in sorted(groups):
+            self._prefill_chunk_group(w, groups[w])
+
+    def _prefill_chunk_group(self, w: int, rows: list[int]) -> None:
+        nrows = self.cfg.prefill_rows
+        toks = np.zeros((nrows, w), np.int32)
+        mask = np.zeros((nrows,), np.bool_)
+        for row in rows:
+            lo = self._prefill_pos[row]
+            toks[row] = self._prefills[row].prompt[lo:lo + w]
+            mask[row] = True
+        logits, self.scratch = self._jit_prefill(
+            self.params, self.scratch, jnp.asarray(toks), jnp.asarray(mask))
+        self.metrics.prefill_calls += 1
+        self.metrics.prefill_tokens += w * len(rows)
+        finishing = []
+        for row in rows:
+            self._prefill_pos[row] += w
+            if self._prefill_pos[row] >= len(self._prefills[row].prompt):
+                finishing.append(row)
+        if finishing:
+            self._finish_prefills(finishing, logits)
+
+    def _finish_prefills(self, rows: list[int], logits) -> None:
+        """Sample first tokens for the completing prompts (one batched
+        on-device call, one transfer) and move them into decode slots."""
+        nrows = self.cfg.prefill_rows
+        temps = np.zeros((nrows,), np.float32)
+        topks = np.zeros((nrows,), np.int32)
+        topps = np.ones((nrows,), np.float32)
+        for row in rows:
+            s = self._prefills[row].sampling
+            temps[row] = s.temperature
+            topks[row] = s.top_k
+            topps[row] = s.top_p
+        self.rng, k = jax.random.split(self.rng)
+        keys = jax.random.split(k, nrows)
+        first = np.asarray(self._jit_sample(
+            logits, keys, jnp.asarray(temps), jnp.asarray(topks),
+            jnp.asarray(topps)))
+        now = time.perf_counter()
+        for row in rows:
+            req = self._prefills.pop(row)
+            del self._prefill_pos[row]
+            tok = int(first[row])
             req.output.append(tok)
             req.ttft_steps = self.steps
+            req.first_token_t = now
+            self.metrics.generated_tokens += 1
             slot = self.free_slots.pop()
             req.slot = slot
+            self.cache = self._jit_insert(self.cache, self.scratch,
+                                          jnp.int32(slot), jnp.int32(row))
+            self._free_rows.append(row)
+            self._lengths[slot] = len(req.prompt)
+            if (len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)):
+                req.state = "done"
+                req.finish_t = now
+                self.free_slots.append(slot)
+                self.finished.append(req)
+                continue
             req.state = "decode"
-            self.cache = self._jit_insert(self.cache, self.scratch, slot=slot)
-            self._tokens[slot, 0] = tok
             self.active[slot] = req
-            self._prefill_req = None
+            self._tokens[slot, 0] = tok
+            self._temps[slot] = req.sampling.temperature
+            self._topks[slot] = req.sampling.top_k
+            self._topps[slot] = req.sampling.top_p
+            self._dev_sampling = None  # re-upload on next decode step
 
+    # -- decode ---------------------------------------------------------------
     def _decode_step(self) -> None:
         if not self.active:
             return
-        toks = jnp.asarray(self._tokens)
-        logits, self.cache = self._jit_decode(self.params, self.cache, toks)
+        self.rng, step_key = jax.random.split(self.rng)
+        if self._dev_sampling is None:
+            self._dev_sampling = (jnp.asarray(self._temps),
+                                  jnp.asarray(self._topks),
+                                  jnp.asarray(self._topps))
+        sampled, self.cache = self._jit_decode(
+            self.params, self.cache, jnp.asarray(self._tokens), step_key,
+            *self._dev_sampling)
+        # The one device->host transfer of the step: the sampled (B,)
+        # token vector.  Everything below reads host numpy only.
+        toks = np.asarray(sampled)
+        self.metrics.decode_steps += 1
+        now = time.perf_counter()
         for slot, req in list(self.active.items()):
-            self.rng, k = jax.random.split(self.rng)
-            tok = int(sample(logits[slot:slot + 1], k, req.sampling)[0])
+            tok = int(toks[slot])
             req.output.append(tok)
             req.tpot_steps += 1
+            self._lengths[slot] += 1
+            self.metrics.generated_tokens += 1
             done = (len(req.output) >= req.max_new_tokens
                     or (req.eos_id is not None and tok == req.eos_id)
-                    or int(self.cache.lengths[slot]) >= self.cfg.max_seq - 1)
+                    or self._lengths[slot] >= self.cfg.max_seq - 1)
             if done:
                 req.state = "done"
+                req.finish_t = now
                 del self.active[slot]
                 self.free_slots.append(slot)
+                self.finished.append(req)
             else:
                 self._tokens[slot, 0] = tok
 
     # -- main loop ------------------------------------------------------------
     @property
     def _prefilling(self) -> bool:
-        return getattr(self, "_prefill_req", None) is not None
+        return bool(self._prefills)
 
     def step(self) -> None:
-        """One engine iteration: a decode step for all active slots plus one
-        prefill chunk (decode-priority order)."""
+        """One engine iteration: a decode step for all active slots plus a
+        prefill chunk for every in-flight prompt (decode-priority order)."""
+        if self.metrics.start_t == 0.0:
+            self.metrics.start_t = time.perf_counter()
         self.steps += 1
-        if not self._prefilling and self.queue and self.free_slots:
-            self._start_prefill(self.queue.popleft())
+        self.metrics.steps += 1
+        self._admit()
         if self.cfg.decode_priority:
             self._decode_step()
-            if self._prefilling:
-                self._prefill_step()
+            self._prefill_step()
         else:
-            if self._prefilling:
-                self._prefill_step()
+            self._prefill_step()
             self._decode_step()
+        self.metrics.end_t = time.perf_counter()
+        self.metrics.occupancy_sum += len(self.active) / self.cfg.max_slots
+        if self.cfg.record_step_log:
+            self.metrics.step_log.append(
+                (self.steps, len(self.active), len(self._prefills),
+                 len(self.queue)))
 
     def run(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
-            if not (self.queue or self.active or self._prefilling):
+            if not (self.queue or self.active or self._prefills):
                 break
             self.step()
 

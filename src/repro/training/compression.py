@@ -23,8 +23,9 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from ..compat import shard_map
 
 
 @dataclass(frozen=True)
@@ -80,7 +81,7 @@ def compressed_psum_grads(grads, mesh, dp_axes=("pod", "data"),
             return out.reshape(gl.shape).astype(gl.dtype)
 
         fn = shard_map(body, mesh=mesh, in_specs=P(*[None] * g.ndim),
-                       out_specs=P(*[None] * g.ndim), check_vma=False)
+                       out_specs=P(*[None] * g.ndim), check_rep=False)
         return fn(g)
 
     return jax.tree.map(one, grads)

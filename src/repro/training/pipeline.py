@@ -20,8 +20,9 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from ..compat import shard_map
 
 
 @dataclass(frozen=True)
@@ -92,4 +93,4 @@ def make_pipelined_fn(layer_fn, mesh, n_stages: int, params_example,
     body = functools.partial(pipeline_forward, layer_fn, n_stages, cfg)
     param_specs = jax.tree.map(lambda _: P(cfg.axis), params_example)
     return shard_map(body, mesh=mesh, in_specs=(param_specs, P()),
-                     out_specs=P(), check_vma=False)
+                     out_specs=P(), check_rep=False)

@@ -1,7 +1,9 @@
 """Unit tests for the HLO-text cost analyzer (pure parsing, no compiles)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="dev extra; see requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.launch import hlo_cost
 from repro.launch.hlo_cost import (Cost, HloCostModel, is_float_type,

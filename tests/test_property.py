@@ -5,7 +5,10 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra; see requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (Collective, NetworkDim, Optimizations,
                         ParallelismConfig, paper_model)

@@ -1,0 +1,205 @@
+"""Rebuilt ServeEngine: concurrent batched prefills, device-side sampling,
+eos / max_seq early exit with slot reuse, and metrics sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import build_model
+from repro.serving import EngineConfig, Request, ServeEngine
+from repro.serving.sampling import SamplingConfig, sample, sample_slots
+
+from conftest import tiny_dense_spec
+
+
+@pytest.fixture(scope="module")
+def served():
+    spec = tiny_dense_spec()
+    model = build_model(spec, mesh=None, param_dtype=jnp.float32,
+                        compute_dtype=jnp.float32)
+    params = model.init(jax.random.key(7))
+    return spec, model, params
+
+
+def _greedy_reference(model, params, prompt, n, max_seq=128):
+    """Token-by-token greedy decode as ground truth (the seed engine's
+    single-request output — its tests assert this same equivalence)."""
+    cache = model.init_cache(1, max_seq)
+    logits, cache = model.prefill(
+        params, jnp.asarray([prompt], jnp.int32), cache=cache)
+    out = [int(jnp.argmax(logits[0]))]
+    for _ in range(n - 1):
+        logits, cache = model.decode_step(
+            params, cache, jnp.asarray([[out[-1]]], jnp.int32))
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+def test_concurrent_prefills_mixed_lengths_match_reference(served):
+    """Mixed prompt lengths force concurrent prefill rows through both the
+    full-width batched path and per-width partial-chunk groups; every
+    request must still decode exactly the reference tokens."""
+    spec, model, params = served
+    rng = np.random.default_rng(3)
+    lengths = [3, 11, 4, 17, 9, 5, 23, 8]
+    prompts = [[int(t) for t in rng.integers(0, spec.vocab, size=n)]
+               for n in lengths]
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_slots=4, max_seq=64, chunk_size=4,
+                                   prefill_rows=3))
+    reqs = eng.serve([Request(prompt=p, max_new_tokens=6) for p in prompts])
+    assert all(r.state == "done" for r in reqs)
+    for p, r in zip(prompts, reqs):
+        assert r.output == _greedy_reference(model, params, p, 6), \
+            "batched prefill changed outputs"
+
+
+def test_greedy_equivalence_fixed_prompt_set(served):
+    """Acceptance fixture: fixed prompt set, greedy outputs must be
+    token-identical to sequential reference decoding (= seed engine)."""
+    spec, model, params = served
+    prompts = [[5, 9, 2, 17, 33, 4, 8, 1], [7, 7, 7], [100, 3, 50, 2, 1],
+               [42] * 10]
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_slots=2, max_seq=64, chunk_size=4,
+                                   prefill_rows=2))
+    reqs = eng.serve([Request(prompt=p, max_new_tokens=8) for p in prompts])
+    for p, r in zip(prompts, reqs):
+        assert r.output == _greedy_reference(model, params, p, 8)
+
+
+def test_eos_early_exit_and_slot_reuse(served):
+    spec, model, params = served
+    prompt = [5, 9, 2, 17, 33, 4]
+    want = _greedy_reference(model, params, prompt, 12)
+    eos = want[4]
+    stop = want.index(eos)  # first occurrence ends the request
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_slots=2, max_seq=64, chunk_size=4))
+    # 5 identical requests over 2 slots: early exit must recycle slots
+    reqs = eng.serve([Request(prompt=list(prompt), max_new_tokens=12,
+                              eos_id=eos) for _ in range(5)])
+    for r in reqs:
+        assert r.state == "done"
+        assert r.output == want[:stop + 1]
+    assert sorted(eng.free_slots) == [0, 1]  # all slots back in the pool
+    assert not eng.active and not eng.queue
+
+
+def test_max_seq_early_exit(served):
+    spec, model, params = served
+    prompt = list(range(1, 11))  # 10 tokens
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_slots=1, max_seq=16, chunk_size=4,
+                                   prefill_rows=1))
+    [req] = eng.serve([Request(prompt=prompt, max_new_tokens=64)])
+    assert req.state == "done"
+    # lengths hit max_seq-1: prefill(10) + first token + 5 decode steps
+    assert len(req.output) == 16 - 10
+
+
+def test_single_transfer_per_decode_step(served):
+    """The rebuilt decode path makes exactly one device->host transfer per
+    step regardless of how many slots are active."""
+    spec, model, params = served
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_slots=4, max_seq=64, chunk_size=8))
+    reqs = [Request(prompt=[1 + i, 2, 3], max_new_tokens=4)
+            for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    import numpy as _np
+    calls = {"n": 0}
+    orig = _np.asarray
+
+    def counting_asarray(x, *a, **kw):
+        if isinstance(x, jax.Array):
+            calls["n"] += 1
+        return orig(x, *a, **kw)
+
+    eng2 = ServeEngine(model, params,
+                       EngineConfig(max_slots=4, max_seq=64, chunk_size=8))
+    for i in range(4):
+        eng2.submit(Request(prompt=[1 + i, 2, 3], max_new_tokens=4))
+    eng2.run(max_steps=1)  # all 4 prompts admitted is fine; warm caches
+    _np.asarray = counting_asarray
+    try:
+        before = calls["n"]
+        eng2._decode_step()
+        assert calls["n"] - before == 1
+    finally:
+        _np.asarray = orig
+
+
+def test_ttft_monotone_in_queue_position(served):
+    """Under decode_priority, earlier-queued equal-length requests get
+    first tokens no later than later-queued ones (steps and wall-clock)."""
+    spec, model, params = served
+    prompts = [[3 + i, 1, 4, 1, 5, 9] for i in range(6)]
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_slots=2, max_seq=64, chunk_size=4,
+                                   prefill_rows=1, record_step_log=True))
+    reqs = eng.serve([Request(prompt=p, max_new_tokens=4) for p in prompts])
+    ttfts = [r.ttft_steps for r in sorted(reqs, key=lambda r: r.rid)]
+    assert ttfts == sorted(ttfts), ttfts
+    walls = [r.ttft_s for r in sorted(reqs, key=lambda r: r.rid)]
+    assert all(w >= 0 for w in walls)
+    assert walls == sorted(walls), walls
+
+
+def test_metrics_sanity(served):
+    spec, model, params = served
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_slots=3, max_seq=64, chunk_size=4,
+                                   record_step_log=True))
+    reqs = eng.serve([Request(prompt=[1, 2, 3, 4, 5], max_new_tokens=5)
+                      for _ in range(5)])
+    m = eng.metrics.summary(reqs)
+    assert m["generated_tokens"] == sum(len(r.output) for r in reqs) == 25
+    assert m["tokens_per_s"] > 0 and m["wall_s"] > 0
+    assert 0 < m["mean_slot_occupancy"] <= 1
+    assert m["requests_done"] == 5
+    assert m["ttft_s_mean"] > 0 and m["ttft_s_p95"] >= m["ttft_s_p50"]
+    assert m["tpot_s_mean"] > 0
+    assert m["prefill_calls"] >= 1 and m["prefill_tokens"] == 25
+    assert len(eng.metrics.step_log) == eng.steps
+
+
+def test_sample_slots_matches_sample_rowwise():
+    """Per-slot device sampling must agree with the config-based oracle."""
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    keys = jax.random.split(jax.random.key(5), 4)
+    cfgs = [SamplingConfig(),  # greedy
+            SamplingConfig(temperature=0.7),
+            SamplingConfig(temperature=1.0, top_k=5),
+            SamplingConfig(temperature=0.5, top_p=0.8)]
+    temps = jnp.asarray([c.temperature for c in cfgs])
+    topks = jnp.asarray([c.top_k for c in cfgs], jnp.int32)
+    topps = jnp.asarray([c.top_p for c in cfgs])
+    got = sample_slots(logits, keys, temps, topks, topps)
+    for i, c in enumerate(cfgs):
+        want = sample(logits[i:i + 1], keys[i], c)
+        assert int(got[i]) == int(want[0]), (i, c)
+
+
+def test_mixed_sampling_configs_one_batch(served):
+    """Greedy and stochastic requests share one engine batch; the greedy
+    ones still match the reference exactly."""
+    spec, model, params = served
+    greedy_prompt = [5, 9, 2, 17]
+    want = _greedy_reference(model, params, greedy_prompt, 6)
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_slots=3, max_seq=64, chunk_size=4))
+    reqs = [Request(prompt=list(greedy_prompt), max_new_tokens=6),
+            Request(prompt=[8, 1, 3], max_new_tokens=6,
+                    sampling=SamplingConfig(temperature=0.8, top_k=20)),
+            Request(prompt=[2, 4, 6, 8], max_new_tokens=6,
+                    sampling=SamplingConfig(temperature=1.0, top_p=0.9))]
+    eng.serve(reqs)
+    assert reqs[0].output == want
+    for r in reqs:
+        assert r.state == "done" and len(r.output) == 6
+        assert all(0 <= t < spec.vocab for t in r.output)

@@ -3,28 +3,49 @@
 Each function returns (rows, derived) where rows is a list of dicts written
 to artifacts/benchmarks/<name>.csv and ``derived`` is the headline metric
 for the run.py CSV line.
+
+All stage-model figures are expressed through the declarative
+:mod:`repro.scenario` API: a figure is a list of Scenarios (usually a
+``Sweep`` grid) handed to ``run()``, whose analytical backend fans the
+cells out over a process pool.  Functions that accept ``smoke=True``
+evaluate a reduced grid (used by ``run.py --smoke`` / CI).
 """
 
 from __future__ import annotations
 
-import dataclasses
+import json
 import math
+import time
+from pathlib import Path
 
 import numpy as np
 
-from repro.core import (GenZ, NetworkDim, Optimizations, ParallelismConfig,
-                        PowerModel, Platform, Workload, paper_model)
-from repro.core.hardware import (GB, MB, GIB, MIB, TB, PB, TFLOP, PFLOP,
-                                 MemoryLevel, NPU, TIB)
+from repro.core import (NetworkDim, Optimizations, PowerModel, Platform,
+                        Workload, paper_model)
+from repro.core.hardware import GB, GIB, TB, PFLOP, MemoryLevel, NPU
 from repro.core.network import Collective, collective_time_1d
-from repro.core.requirements import platform_requirements
 from repro.core.scale_sim_lite import (OffloadConfig, SystolicConfig,
                                        prefill_latency)
-from repro.core.stages import decode as stage_decode
 from repro.core.usecases import USE_CASES, use_case
+from repro.scenario import (ChunkedSpec, Scenario, SpeculativeSpec, Sweep,
+                            run, table7_platforms, warm_pool)
+from repro.scenario.platforms import scaled_out
 
 
 FP8 = dict(weight_dtype="fp8", act_dtype="fp8", kv_dtype="fp8")
+FP8_OPT = Optimizations(**FP8)
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "benchmarks"
+
+
+def _extra(rep, key: str) -> dict:
+    """Stage detail from a Report, surfacing the cell's own diagnostic
+    (rep.error) instead of a bare KeyError when the cell did not run."""
+    if key not in rep.extra:
+        raise RuntimeError(
+            f"scenario {rep.scenario.describe()} has no {key!r} result "
+            f"(status={rep.status}): {rep.error}")
+    return rep.extra[key]
 
 
 # ---------------------------------------------------------------------------
@@ -49,23 +70,29 @@ def fig8_collectives():
 # ---------------------------------------------------------------------------
 
 def fig9_chunked_breakdown():
-    g = GenZ.gb200_node(8).with_opt(**FP8)
+    scs = [
+        Scenario.make(model,
+                      workload=Workload(batch=dec_b, tau_p=4096, tau_d=1024),
+                      platform="gb200x8", parallelism=dict(tp=4), opt=FP8_OPT,
+                      mode="chunked",
+                      chunked=ChunkedSpec(chunk=chunk, decode_batch=dec_b))
+        for model in ("gpt3-175b", "llama3-405b")
+        for chunk in (256, 1024, 2048)
+        for dec_b in (1, 32, 128)
+    ]
     rows = []
-    for model in ("gpt3-175b", "llama3-405b"):
-        for chunk in (256, 1024, 2048):
-            for dec_b in (1, 32, 128):
-                wl = Workload(batch=dec_b, tau_p=4096, tau_d=1024)
-                r = g.chunked(model, chunk=chunk, decode_batch=dec_b,
-                              workload=wl, parallelism=dict(tp=4))
-                br = r.timing.breakdown()
-                rows.append({
-                    "model": model, "chunk": chunk, "decode_batch": dec_b,
-                    "linear_ms": br["linear"] * 1e3,
-                    "attention_ms": br["attention"] * 1e3,
-                    "collective_ms": br["collective"] * 1e3,
-                    "total_ms": r.time * 1e3,
-                    "fits": r.memory.fits,
-                })
+    for rep in run(scs):
+        c = _extra(rep, "chunked")
+        br = c["breakdown"]
+        rows.append({
+            "model": rep.scenario.model_name, "chunk": c["chunk"],
+            "decode_batch": c["decode_batch"],
+            "linear_ms": br["linear"] * 1e3,
+            "attention_ms": br["attention"] * 1e3,
+            "collective_ms": br["collective"] * 1e3,
+            "total_ms": c["time_s"] * 1e3,
+            "fits": c["fits"],
+        })
     # paper finding: linear time ~constant per chunk; attention grows
     g175 = [r for r in rows if r["model"] == "gpt3-175b"
             and r["chunk"] == 1024]
@@ -78,26 +105,30 @@ def fig9_chunked_breakdown():
 # ---------------------------------------------------------------------------
 
 def fig11_speculative():
-    g = GenZ.gb200_node(8).with_opt(**FP8)
     pairs = [("llama3-70b", "llama3-8b"), ("gemma2-27b", "gemma2-2b")]
+    wl = Workload(batch=4, tau_p=1024, tau_d=1024)
+    base_scs = [Scenario.make(t, workload=wl, batch=4, platform="gb200x8",
+                              parallelism=dict(tp=2), opt=FP8_OPT)
+                for t, _ in pairs]
+    grid = [(t, d, n, gamma) for t, d in pairs for n in (4, 16)
+            for gamma in (0.7, 0.9)]
+    sd_scs = [Scenario.make(t, workload=wl, batch=4, platform="gb200x8",
+                            parallelism=dict(tp=2), opt=FP8_OPT,
+                            mode="speculative",
+                            speculative=SpeculativeSpec(draft=d, n=n,
+                                                        gamma=gamma))
+              for t, d, n, gamma in grid]
+    reps = run(base_scs + sd_scs)
+    base_thr = {sc.model_name: _extra(rep, "decode")["tokens_per_s"]
+                for sc, rep in zip(base_scs, reps[:len(base_scs)])}
     rows = []
-    for target, draft in pairs:
-        base = g.decode(target, workload=Workload(batch=4, tau_p=1024,
-                                                  tau_d=1024),
-                        parallelism=dict(tp=2), batch=4)
-        base_thr = base.meta["tokens_per_s"]
-        for n in (4, 16):
-            for gamma in (0.7, 0.9):
-                sd = g.speculative(target, draft, n=n, gamma=gamma,
-                                   workload=Workload(batch=4, tau_p=1024,
-                                                     tau_d=1024),
-                                   parallelism=dict(tp=2), batch=4)
-                rows.append({
-                    "target": target, "draft": draft, "n": n, "gamma": gamma,
-                    "thr_tok_s": sd.meta["tokens_per_s"],
-                    "baseline_tok_s": base_thr,
-                    "speedup": sd.meta["tokens_per_s"] / base_thr,
-                })
+    for (t, d, n, gamma), rep in zip(grid, reps[len(base_scs):]):
+        thr = _extra(rep, "speculative")["tokens_per_s"]
+        rows.append({
+            "target": t, "draft": d, "n": n, "gamma": gamma,
+            "thr_tok_s": thr, "baseline_tok_s": base_thr[t],
+            "speedup": thr / base_thr[t],
+        })
     bad = [r for r in rows if r["n"] == 16 and r["gamma"] == 0.7]
     ok = all(r["speedup"] < 1.0 for r in bad)
     return rows, f"N=16,g=0.7 slower than baseline: {ok} (paper finding)"
@@ -108,24 +139,26 @@ def fig11_speculative():
 # ---------------------------------------------------------------------------
 
 def fig12_moe_parallelism():
-    g = GenZ.hgx_h100(8).with_opt(**FP8)
     wl = Workload(batch=32, tau_p=4096, tau_d=256, beam=1)
     strategies = {"tp8": dict(tp=8), "tp4_ep2": dict(tp=4, ep=2),
                   "tp2_ep4": dict(tp=2, ep=4), "ep8": dict(ep=8)}
-    rows = []
-    for name, par in strategies.items():
-        pre = g.prefill("mixtral-8x22b", workload=wl, batch=32,
-                        parallelism=par)
-        dec = g.decode("mixtral-8x22b", workload=wl, batch=32,
-                       parallelism=par)
+    imbal = Optimizations(**FP8, moe_load_balance=0.0)
+    scs = []
+    for par in strategies.values():
+        base = Scenario.make("mixtral-8x22b", workload=wl, batch=32,
+                             platform="hgx-h100x8", parallelism=par,
+                             opt=FP8_OPT)
         # worst-case expert imbalance for decode (paper: 3.23ms vs 11.33ms)
-        g_imbal = g.with_opt(moe_load_balance=0.0)
-        dec_bad = g_imbal.decode("mixtral-8x22b", workload=wl, batch=32,
-                                 parallelism=par)
-        rows.append({"strategy": name, "ttft_ms": pre.time * 1e3,
-                     "tpot_ms": dec.meta["tpot"] * 1e3,
-                     "tpot_imbalanced_ms": dec_bad.meta["tpot"] * 1e3,
-                     "fits": dec.memory.fits})
+        scs += [base, base.replace(opt=imbal)]
+    reps = run(scs)
+    rows = []
+    for i, name in enumerate(strategies):
+        bal, bad = reps[2 * i], reps[2 * i + 1]
+        rows.append({"strategy": name,
+                     "ttft_ms": _extra(bal, "prefill")["time_s"] * 1e3,
+                     "tpot_ms": _extra(bal, "decode")["tpot"] * 1e3,
+                     "tpot_imbalanced_ms": _extra(bad, "decode")["tpot"] * 1e3,
+                     "fits": bal.fits_memory})
     best_pre = min(rows, key=lambda r: r["ttft_ms"])["strategy"]
     best_dec = min(rows, key=lambda r: r["tpot_ms"])["strategy"]
     return rows, f"best prefill={best_pre}, best decode={best_dec}"
@@ -136,17 +169,18 @@ def fig12_moe_parallelism():
 # ---------------------------------------------------------------------------
 
 def fig13_arch_scaling():
-    g = GenZ.hgx_h100(8).with_opt(**FP8)
     models = ["llama2-7b", "llama3-8b", "mixtral-8x7b", "falcon-mamba-7b"]
+    base = Scenario.make(models[0],
+                         workload=Workload(batch=4, tau_p=1024, tau_d=256),
+                         batch=4, platform="hgx-h100x8",
+                         parallelism=dict(tp=8), opt=FP8_OPT)
+    grid = Sweep(base).over(model=models, tau_p=[1024, 4096, 16384, 65536])
     rows = []
-    for m in models:
-        for ctx in (1024, 4096, 16384, 65536):
-            wl = Workload(batch=4, tau_p=ctx, tau_d=256)
-            pre = g.prefill(m, workload=wl, batch=4, parallelism=dict(tp=8))
-            dec = g.decode(m, workload=wl, batch=4, parallelism=dict(tp=8))
-            rows.append({"model": m, "ctx": ctx, "batch": 4,
-                         "prefill_ms": pre.time * 1e3,
-                         "tpot_ms": dec.meta["tpot"] * 1e3})
+    for rep in run(grid):
+        rows.append({"model": rep.scenario.model_name,
+                     "ctx": rep.scenario.workload.tau_p, "batch": 4,
+                     "prefill_ms": _extra(rep, "prefill")["time_s"] * 1e3,
+                     "tpot_ms": _extra(rep, "decode")["tpot"] * 1e3})
     mamba = [r for r in rows if r["model"] == "falcon-mamba-7b"]
     flat = mamba[-1]["tpot_ms"] / mamba[0]["tpot_ms"]
     dense = [r for r in rows if r["model"] == "llama2-7b"]
@@ -184,18 +218,21 @@ def fig14_memory_capacity():
 # Fig. 15: platform compute + bandwidth requirements
 # ---------------------------------------------------------------------------
 
-def fig15_platform_reqs():
-    models = ["llama2-7b", "mixtral-8x7b", "llama3-70b", "gpt3-175b",
-              "gpt4-1.8t"]
+def fig15_platform_reqs(smoke: bool = False):
+    models = (["llama2-7b", "llama3-70b"] if smoke else
+              ["llama2-7b", "mixtral-8x7b", "llama3-70b", "gpt3-175b",
+               "gpt4-1.8t"])
+    base = Scenario.make(models[0], use_case="question_answering", batch=1,
+                         platform="hgx-h100x8", opt=FP8_OPT)
+    grid = Sweep(base).over(model=models, use_case=list(USE_CASES))
     rows = []
-    for m in models:
-        spec = paper_model(m)
-        for uc in USE_CASES:
-            req = platform_requirements(spec, use_case(uc, 1))
-            rows.append({"model": m, "use_case": uc,
-                         "pflops": req.compute_pflops,
-                         "bw_tbps": req.mem_bw_tbps,
-                         "cap_gb": req.mem_capacity_gb})
+    for rep in run(grid):
+        req = _extra(rep, "requirements")
+        rows.append({"model": rep.scenario.model_name,
+                     "use_case": rep.scenario.workload.name,
+                     "pflops": req["compute_pflops"],
+                     "bw_tbps": req["mem_bw_tbps"],
+                     "cap_gb": req["mem_capacity_gb"]})
     qa = {r["model"]: r for r in rows if r["use_case"] == "question_answering"}
     rag = {r["model"]: r for r in rows if r["use_case"] == "qa_rag"}
     ratio = np.exp(np.mean([np.log(rag[m]["pflops"] / qa[m]["pflops"])
@@ -219,26 +256,30 @@ def _dense5t_platform(flops_mult=1.0, bw_mult=1.0, icn_bw_mult=1.0,
 
 
 def fig16_hw_scaling():
-    spec = paper_model("dense-5t")
-    par = ParallelismConfig(tp=32)
-    opt = Optimizations(**FP8)
-    rows = []
     knobs = {"tflops": dict(flops_mult=4.0), "mem_bw": dict(bw_mult=4.0),
              "icn_bw": dict(icn_bw_mult=4.0),
              "icn_lat": dict(icn_lat_mult=0.04)}
+    scs, keys = [], []
     for ctx in (1024, 32768):
         wl = Workload(batch=1, tau_p=ctx, tau_d=256)
-        from repro.core.stages import prefill as stage_prefill
-        base_p = stage_prefill(spec, _dense5t_platform(), par, opt, wl).time
-        base_d = stage_decode(spec, _dense5t_platform(), par, opt,
-                              wl).meta["tpot"]
+        base = Scenario.make("dense-5t", workload=wl, batch=1,
+                             platform=_dense5t_platform(),
+                             parallelism=dict(tp=32), opt=FP8_OPT)
+        scs.append(base)
+        keys.append(("base", ctx))
         for name, kw in knobs.items():
-            plat = _dense5t_platform(**kw)
-            p = stage_prefill(spec, plat, par, opt, wl).time
-            d = stage_decode(spec, plat, par, opt, wl).meta["tpot"]
+            scs.append(base.replace(platform=_dense5t_platform(**kw)))
+            keys.append((name, ctx))
+    reps = dict(zip(keys, run(scs)))
+    rows = []
+    for ctx in (1024, 32768):
+        base_p = _extra(reps[("base", ctx)], "prefill")["time_s"]
+        base_d = _extra(reps[("base", ctx)], "decode")["tpot"]
+        for name in knobs:
+            r = reps[(name, ctx)]
             rows.append({"knob": name, "ctx": ctx,
-                         "prefill_speedup": base_p / p,
-                         "decode_speedup": base_d / d})
+                         "prefill_speedup": base_p / _extra(r, "prefill")["time_s"],
+                         "decode_speedup": base_d / _extra(r, "decode")["tpot"]})
     pre32 = {r["knob"]: r["prefill_speedup"] for r in rows
              if r["ctx"] == 32768}
     dec32 = {r["knob"]: r["decode_speedup"] for r in rows
@@ -254,71 +295,91 @@ def fig16_hw_scaling():
 # ---------------------------------------------------------------------------
 
 def _table7_platforms() -> dict[str, Platform]:
-    from repro.core.hardware import (cs3_like, gb200_like, groqchip_like,
-                                     soho_like)
-    gpu = Platform(
-        npu=gb200_like(),
-        dims=(NetworkDim("nvl", 8, 900 * GB, 0.5e-6, topology="switch"),
-              NetworkDim("so", 4, 900 * GB, 0.5e-6, topology="switch")),
-        power=PowerModel(57.2e3), name="gpus")
-    wafer = Platform(
-        npu=cs3_like(),
-        dims=(NetworkDim("wafer", 1, 214 * PB, 1e-7),),
-        power=PowerModel(23e3), name="sram_wafer")
-    chips = Platform(
-        npu=groqchip_like(),
-        dims=(NetworkDim("fc", 64, 3.2 * TB, 2e-7, topology="fc"),
-              NetworkDim("ring", 16, 256 * GB, 1e-6, topology="ring")),
-        power=PowerModel(276.8e3), name="sram_chips")
-    asic = Platform(
-        npu=soho_like(),
-        dims=(NetworkDim("nvl", 8, 900 * GB, 0.5e-6, topology="switch"),
-              NetworkDim("so", 4, 900 * GB, 0.5e-6, topology="switch")),
-        power=PowerModel(96e3), name="asics")
-    return {p.name: p for p in (gpu, wafer, chips, asic)}
+    # kept for one release: the catalog moved to repro.scenario.platforms
+    return table7_platforms()
 
 
-def fig17_platform_compare():
-    cases = [("llama3-8b", 8192), ("llama3-70b", 8192),
-             ("llama3-405b", 8192), ("dense-5t", 8192), ("moe-10t", 8192)]
-    platforms = _table7_platforms()
+def _fig17_scenarios(smoke: bool = False) -> list[Scenario]:
+    """The Fig. 17 grid as declarative scenarios (model x platform)."""
+    cases = ([("llama3-8b", 8192), ("llama3-70b", 8192)] if smoke else
+             [("llama3-8b", 8192), ("llama3-70b", 8192),
+              ("llama3-405b", 8192), ("dense-5t", 8192), ("moe-10t", 8192)])
+    platforms = table7_platforms()
     pars = {"gpus": dict(tp=8), "sram_wafer": dict(),
             "sram_chips": dict(tp=64, pp=16), "asics": dict(tp=8)}
-    opt = Optimizations(**FP8)
-    rows = []
-    from repro.core.stages import prefill as stage_prefill
+    scs = []
     for model, ctx in cases:
-        spec = paper_model(model)
         wl = Workload(batch=4, tau_p=ctx, tau_d=1024)
         for name, plat in platforms.items():
-            par = ParallelismConfig(**pars[name])
+            par = dict(pars[name])
             if model in ("llama3-405b", "dense-5t", "moe-10t") \
                     and name in ("gpus", "asics"):
-                par = ParallelismConfig(tp=32)
-                plat = dataclasses.replace(
-                    plat, dims=plat.dims + (NetworkDim(
-                        "scale", 4, 100 * GB, 2e-6, topology="switch"),))
-            try:
-                pre = stage_prefill(spec, plat, par, opt, wl)
-                dec = stage_decode(spec, plat, par, opt, wl)
-            except ValueError:
-                rows.append({"model": model, "platform": name,
-                             "status": "config-too-small", "thr_tok_s": 0,
-                             "tok_per_kwh": 0})
-                continue
-            if not dec.memory.fits:
-                rows.append({"model": model, "platform": name,
-                             "status": "OOM", "thr_tok_s": 0,
-                             "tok_per_kwh": 0})
-                continue
-            thr = dec.meta["tokens_per_s"]
-            e_tok = (dec.energy / max(wl.batch, 1))  # J per token
-            rows.append({"model": model, "platform": name, "status": "ok",
-                         "thr_tok_s": thr,
-                         "tok_per_kwh": 3.6e6 / e_tok if e_tok else 0.0})
+                par = dict(tp=32)
+                plat = scaled_out(plat)
+            scs.append(Scenario.make(model, workload=wl, batch=4,
+                                     platform=plat, parallelism=par,
+                                     opt=FP8_OPT, tag=name))
+    return scs
+
+
+def fig17_platform_compare(smoke: bool = False):
+    rows = []
+    for rep in run(_fig17_scenarios(smoke)):
+        model, name = rep.scenario.model_name, rep.scenario.tag
+        if rep.status == "error":
+            # a broken cell must fail the bench, not masquerade as OOM
+            raise RuntimeError(f"{model} on {name}: {rep.error}")
+        if rep.status == "infeasible":
+            rows.append({"model": model, "platform": name,
+                         "status": "config-too-small", "thr_tok_s": 0,
+                         "tok_per_kwh": 0})
+            continue
+        if not rep.fits_memory:
+            rows.append({"model": model, "platform": name,
+                         "status": "OOM", "thr_tok_s": 0,
+                         "tok_per_kwh": 0})
+            continue
+        dec = _extra(rep, "decode")
+        thr = dec["tokens_per_s"]
+        e_tok = dec["energy_j"] / max(rep.scenario.workload.batch, 1)
+        rows.append({"model": model, "platform": name, "status": "ok",
+                     "thr_tok_s": thr,
+                     "tok_per_kwh": 3.6e6 / e_tok if e_tok else 0.0})
     ok_rows = [r for r in rows if r["status"] == "ok"]
     best = max(ok_rows, key=lambda r: r["tok_per_kwh"])
     return rows, f"best perf/energy: {best['platform']} on {best['model']}"
+
+
+# ---------------------------------------------------------------------------
+# Sweep-runner scaling: parallel vs serial evaluation of the Fig. 17 grid
+# ---------------------------------------------------------------------------
+
+def fig17_sweep_scaling(smoke: bool = False):
+    """The executor's own benchmark: the same Fig. 17 grid priced serially
+    and through the process pool; the JSON artifact keeps the serving-perf
+    trajectory across PRs."""
+    repeat = 2 if smoke else 5
+    scs = _fig17_scenarios(smoke) * repeat
+    warm_pool()  # pool creation is one-time; measure steady-state
+    t0 = time.perf_counter()
+    serial = run(scs, max_workers=1)
+    t_serial = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    parallel = run(scs)
+    t_parallel = time.perf_counter() - t0
+    import os
+    row = {"cells": len(scs), "repeat": repeat, "smoke": smoke,
+           "workers": os.cpu_count() or 1,
+           "serial_s": t_serial, "parallel_s": t_parallel,
+           "speedup": t_serial / t_parallel if t_parallel else 0.0,
+           "reports_equal": all(a == b for a, b in zip(serial, parallel))}
+    ART.mkdir(parents=True, exist_ok=True)
+    # a smoke run must not clobber the full-grid trajectory record
+    out = "sweep_scaling_smoke.json" if smoke else "sweep_scaling.json"
+    (ART / out).write_text(json.dumps(row, indent=2))
+    return [row], (f"parallel sweep {row['speedup']:.2f}x vs serial over "
+                   f"{row['cells']} cells ({row['workers']} workers), "
+                   f"identical reports: {row['reports_equal']}")
 
 
 # ---------------------------------------------------------------------------
@@ -338,12 +399,8 @@ def fig18_hbd():
     }
     npu = NPU(name="hypo9", flops=9 * PFLOP, eff_compute=0.8,
               mem=MemoryLevel("hbm", 256 * GIB, 13.5 * TB))
-    spec = paper_model("llama3-405b")
-    opt = Optimizations(**FP8)
-    par = ParallelismConfig(tp=64, pp=4)
     wl = Workload(batch=16, tau_p=8192, tau_d=1024)
-    rows = []
-    from repro.core.stages import prefill as stage_prefill
+    scs = []
     for name, dims_cfg in configs.items():
         dims = []
         for i, (sz, link) in enumerate(dims_cfg):
@@ -352,10 +409,15 @@ def fig18_hbd():
                                    topology=topo))
         plat = Platform(npu=npu, dims=tuple(dims), power=PowerModel(500e3),
                         name=name)
-        pre = stage_prefill(spec, plat, par, opt, wl)
-        dec = stage_decode(spec, plat, par, opt, wl)
-        rows.append({"config": name, "ttft_ms": pre.time * 1e3,
-                     "decode_thr": dec.meta["tokens_per_s"]})
+        scs.append(Scenario.make("llama3-405b", workload=wl, batch=16,
+                                 platform=plat,
+                                 parallelism=dict(tp=64, pp=4), opt=FP8_OPT,
+                                 tag=name))
+    rows = []
+    for rep in run(scs):
+        rows.append({"config": rep.scenario.tag,
+                     "ttft_ms": _extra(rep, "prefill")["time_s"] * 1e3,
+                     "decode_thr": _extra(rep, "decode")["tokens_per_s"]})
     d = {r["config"]: r for r in rows}
     ok = (d["D_hbd256"]["decode_thr"] >= d["A_hbd8"]["decode_thr"]
           and d["E_hbd64_opt"]["decode_thr"]

@@ -1,17 +1,26 @@
-"""Run every benchmark (one per paper table/figure + system benches).
+"""Run benchmarks (one per paper table/figure + system benches).
 
 Prints ``name,us_per_call,derived`` CSV rows and writes per-figure data to
 artifacts/benchmarks/<name>.csv.
+
+    python benchmarks/run.py                  # everything, full grids
+    python benchmarks/run.py --only fig17     # name-substring filter
+    python benchmarks/run.py --smoke          # CI: reduced Sweep grids,
+                                              # JAX-heavy system benches
+                                              # skipped
 """
 
 from __future__ import annotations
 
+import argparse
 import csv
+import inspect
 import sys
 import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 ART = Path(__file__).resolve().parent.parent / "artifacts" / "benchmarks"
 
@@ -26,6 +35,7 @@ BENCHES = [
     ("fig15_platform_reqs", "paper_figures"),
     ("fig16_hw_scaling", "paper_figures"),
     ("fig17_platform_compare", "paper_figures"),
+    ("fig17_sweep_scaling", "paper_figures"),
     ("fig18_hbd", "paper_figures"),
     ("fig19_microarch", "paper_figures"),
     ("fig20_super_llm", "paper_figures"),
@@ -36,6 +46,11 @@ BENCHES = [
     ("disagg_planner", "system_benches"),
     ("kernel_micro", "system_benches"),
 ]
+
+#: JAX-compile-heavy system benches: redundant with the test suite in CI,
+#: so --smoke drops them (the analytical figures stay, on reduced grids)
+SMOKE_SKIP = {"validation_hlo", "serving_engine", "spec_decode_sys",
+              "kernel_micro"}
 
 
 def _write_csv(name: str, rows: list[dict]) -> None:
@@ -53,17 +68,43 @@ def _write_csv(name: str, rows: list[dict]) -> None:
         w.writerows(rows)
 
 
-def main() -> None:
+def select(only: str | None, smoke: bool) -> list[tuple[str, str]]:
+    benches = BENCHES
+    if only:
+        benches = [(n, m) for n, m in benches if only in n]
+    if smoke:
+        benches = [(n, m) for n, m in benches if n not in SMOKE_SKIP]
+    if not benches:
+        avail = [n for n, _ in BENCHES
+                 if not (smoke and n in SMOKE_SKIP)]
+        raise SystemExit(
+            f"--only {only!r}{' with --smoke' if smoke else ''} matches no "
+            f"bench; available: {', '.join(avail)}")
+    return benches
+
+
+def main(argv: list[str] | None = None) -> None:
     import importlib
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None, metavar="SUBSTR",
+                    help="run only benches whose name contains SUBSTR")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grids (Sweep-based figures) and no "
+                         "JAX-heavy system benches: the CI configuration")
+    args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
     failures = 0
-    for name, module in BENCHES:
+    for name, module in select(args.only, args.smoke):
         mod = importlib.import_module(f"benchmarks.{module}")
         fn = getattr(mod, name)
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(fn).parameters:
+            kwargs["smoke"] = True
         t0 = time.time()
         try:
-            rows, derived = fn()
+            rows, derived = fn(**kwargs)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},ERROR,\"{type(e).__name__}: {e}\"")

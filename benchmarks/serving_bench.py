@@ -6,11 +6,17 @@ trajectory (tokens/s, TTFT, TPOT, slot occupancy per cell).
     PYTHONPATH=src python benchmarks/serving_bench.py            # full sweep
     PYTHONPATH=src python benchmarks/serving_bench.py --smoke    # CI smoke
     PYTHONPATH=src python benchmarks/serving_bench.py --out r.json
+    PYTHONPATH=src python benchmarks/serving_bench.py --scenario sc.json
 
-Open-loop driver: arrivals are Poisson at the offered rate; requests are
-submitted when wall-clock passes their arrival time, and the engine steps
-whenever it has work.  One engine instance is reused across cells (same
-jitted programs — only chunk widths retrace), with metrics reset per cell.
+The engine under test is constructed by *lowering a Scenario*
+(``repro.scenario``): either one loaded from ``--scenario`` (a
+``Scenario.to_json()`` file; its model / mode / chunk spec drive the
+engine) or one assembled from the CLI flags.  The open-loop driver then
+sweeps offered rate × prompt mix around that scenario: arrivals are
+Poisson at the offered rate; requests are submitted when wall-clock passes
+their arrival time, and the engine steps whenever it has work.  One engine
+instance is reused across cells (same jitted programs — only chunk widths
+retrace), with metrics reset per cell.
 """
 
 from __future__ import annotations
@@ -24,7 +30,6 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.serving import EngineConfig, EngineMetrics, Request, ServeEngine
@@ -36,24 +41,44 @@ MIXES = {
 }
 
 
-def build_tiny_model():
+def build_scenario(args):
+    """CLI flags -> the Scenario the engine is lowered from."""
     from repro.core.modelspec import AttnSpec, ModelSpec
-    from repro.models import build_model
-    spec = ModelSpec(name="bench-tiny", d_model=64, n_layers=2, n_heads=4,
-                     n_kv_heads=2, d_head=16, d_ff=128, vocab=256,
-                     attn=AttnSpec(kind="full", causal=True))
-    model = build_model(spec, mesh=None, param_dtype=jnp.float32,
-                        compute_dtype=jnp.float32)
-    return spec, model, model.init(jax.random.key(0))
+    from repro.core.stages import Workload
+    from repro.scenario import ChunkedSpec, Scenario
+
+    if args.scenario:
+        return Scenario.from_json(Path(args.scenario).read_text())
+    model = args.arch or ModelSpec(
+        name="bench-tiny", d_model=64, n_layers=2, n_heads=4, n_kv_heads=2,
+        d_head=16, d_ff=128, vocab=256, attn=AttnSpec(kind="full",
+                                                      causal=True))
+    wl = Workload(batch=args.requests, tau_p=max(MIXES[m][1] for m in
+                                                 args.mixes),
+                  tau_d=args.max_new, name="serving-bench")
+    return Scenario.make(model, workload=wl, batch=args.requests,
+                         platform="hgx-h100x8", mode="chunked",
+                         chunked=ChunkedSpec(chunk=args.chunk,
+                                             decode_batch=args.slots))
 
 
-def build_arch_model(arch: str):
-    from repro.configs import registry
-    from repro.models import build_model
-    spec = registry.get_reduced(arch)
-    model = build_model(spec, mesh=None, param_dtype=jnp.float32,
-                        compute_dtype=jnp.float32)
-    return spec, model, model.init(jax.random.key(0))
+def build_engine(sc, args):
+    """Lower the Scenario to a live engine (shared with the scenario
+    engine backend, so bench and backend measure the same thing)."""
+    from repro.scenario.engine_backend import lower_model
+
+    if sc.mode not in ("monolithic", "chunked"):
+        raise SystemExit(
+            f"serving_bench drives a plain ServeEngine; scenario mode "
+            f"{sc.mode!r} has no lowering here (use repro.scenario.run("
+            f"sc, backend='engine') for speculative scenarios)")
+    spec, model, params = lower_model(sc.model)
+    chunk = (sc.chunked.chunk if sc.mode == "chunked" and sc.chunked
+             else args.chunk)
+    cfg = EngineConfig(max_slots=args.slots, max_seq=args.max_seq,
+                       chunk_size=min(chunk, args.max_seq),
+                       prefill_rows=args.prefill_rows)
+    return spec, ServeEngine(model, params, cfg, rng=jax.random.key(1))
 
 
 def run_cell(eng: ServeEngine, vocab: int, rate: float, mix: str,
@@ -94,6 +119,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None,
                     help="registry arch (default: inline tiny model)")
+    ap.add_argument("--scenario", default=None,
+                    help="path to a Scenario JSON; overrides --arch and "
+                         "drives the engine's mode/chunk config")
     ap.add_argument("--rates", type=float, nargs="+",
                     default=[2.0, 8.0, 32.0])
     ap.add_argument("--mixes", nargs="+", default=list(MIXES),
@@ -116,12 +144,8 @@ def main() -> None:
         args.requests = 6
         args.max_new = 8
 
-    spec, model, params = (build_arch_model(args.arch) if args.arch
-                           else build_tiny_model())
-    cfg = EngineConfig(max_slots=args.slots, max_seq=args.max_seq,
-                       chunk_size=args.chunk,
-                       prefill_rows=args.prefill_rows)
-    eng = ServeEngine(model, params, cfg, rng=jax.random.key(1))
+    sc = build_scenario(args)
+    spec, eng = build_engine(sc, args)
     # warm the jitted programs so cell 0 isn't all compile time
     eng.serve([Request(prompt=[1, 2, 3, 4, 5], max_new_tokens=2)])
 
@@ -141,10 +165,12 @@ def main() -> None:
 
     report = {
         "bench": "serving_bench",
-        "arch": args.arch or "bench-tiny",
-        "engine": {"max_slots": args.slots, "chunk_size": args.chunk,
-                   "prefill_rows": args.prefill_rows,
-                   "max_seq": args.max_seq},
+        "arch": spec.name,
+        "scenario": sc.to_dict(),
+        "engine": {"max_slots": eng.cfg.max_slots,
+                   "chunk_size": eng.cfg.chunk_size,
+                   "prefill_rows": eng.cfg.prefill_rows,
+                   "max_seq": eng.cfg.max_seq},
         "smoke": args.smoke,
         "cells": cells,
     }

@@ -1,7 +1,7 @@
 """Design-space exploration driver (paper §VII): compare platform
-architectures, HBD sizes, and parallelism strategies for a workload you
-pick, then print the winner per metric — the paper's "which platform should
-I build/buy?" loop.
+architectures for a workload you pick, then print the winner per metric —
+the paper's "which platform should I build/buy?" loop, now one Sweep over
+the platform axis evaluated in parallel.
 
     PYTHONPATH=src python examples/platform_dse.py --model llama3-405b \
         --input 8192 --output 1024 --batch 8
@@ -13,9 +13,13 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.core import (GenZ, Optimizations, ParallelismConfig, Workload,
-                        paper_model)
-from repro.core.stages import decode as stage_decode, prefill as stage_prefill
+from repro.core import Workload
+from repro.scenario import Scenario, Sweep, run, table7_platforms
+
+FP8 = dict(weight_dtype="fp8", act_dtype="fp8", kv_dtype="fp8")
+
+PARS = {"gpus": dict(tp=32), "sram_wafer": dict(),
+        "sram_chips": dict(tp=64, pp=16), "asics": dict(tp=32)}
 
 
 def main() -> None:
@@ -26,36 +30,36 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     args = ap.parse_args()
 
-    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
-    from benchmarks.paper_figures import _table7_platforms
-
-    spec = paper_model(args.model)
     wl = Workload(batch=args.batch, tau_p=args.input, tau_d=args.output)
-    opt = Optimizations(weight_dtype="fp8", act_dtype="fp8", kv_dtype="fp8")
-    pars = {"gpus": dict(tp=32), "sram_wafer": dict(),
-            "sram_chips": dict(tp=64, pp=16), "asics": dict(tp=32)}
+    scs = []
+    for name, plat in table7_platforms().items():
+        par = dict(PARS[name])
+        total = 1
+        for v in par.values():
+            total *= v
+        if total > plat.num_npus:
+            par = dict(tp=plat.num_npus)
+        scs.append(Scenario.make(args.model, workload=wl, batch=args.batch,
+                                 platform=plat, parallelism=par, opt=FP8,
+                                 tag=name))
 
     print(f"workload: {args.model}, {args.input}/{args.output} tokens, "
           f"batch {args.batch} (fp8)\n")
     print(f"{'platform':12s} {'TTFT s':>8s} {'TPOT ms':>9s} "
           f"{'tok/s':>9s} {'tok/kWh':>10s} {'fits':>5s}")
     results = []
-    for name, plat in _table7_platforms().items():
-        par = ParallelismConfig(**pars[name])
-        if par.total > plat.num_npus:
-            par = ParallelismConfig(tp=plat.num_npus)
-        try:
-            pre = stage_prefill(spec, plat, par, opt, wl)
-            dec = stage_decode(spec, plat, par, opt, wl)
-        except ValueError as e:
-            print(f"{name:12s} config error: {e}")
+    for rep in run(scs):
+        name = rep.scenario.tag
+        if rep.status in ("infeasible", "error"):
+            print(f"{name:12s} config error: {rep.error}")
             continue
-        fits = dec.memory.fits
-        thr = dec.meta["tokens_per_s"] if fits else 0.0
-        e_tok = dec.energy / max(wl.batch, 1)
+        dec = rep.extra["decode"]
+        fits = rep.fits_memory
+        thr = dec["tokens_per_s"] if fits else 0.0
+        e_tok = dec["energy_j"] / max(wl.batch, 1)
         tpkwh = 3.6e6 / e_tok if (fits and e_tok) else 0.0
         results.append((name, thr, tpkwh))
-        print(f"{name:12s} {pre.time:8.2f} {dec.meta['tpot']*1e3:9.2f} "
+        print(f"{name:12s} {rep.ttft_s:8.2f} {dec['tpot']*1e3:9.2f} "
               f"{thr:9.0f} {tpkwh:10.0f} {'Y' if fits else 'OOM':>5s}")
 
     if results:

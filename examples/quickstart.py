@@ -1,10 +1,15 @@
-"""Quickstart: the GenZ analytical API in ~30 lines (paper Fig. 2 flow).
+"""Quickstart: the declarative Scenario API in ~30 lines (paper Fig. 2).
 
     PYTHONPATH=src python examples/quickstart.py
 
-Estimates TTFT / TPOT / throughput / energy for LLaMA3-70B chat serving on
-an HGX-H100 node, sweeps tensor parallelism, and prints the §VI platform
-requirements for GPT-4-class models.
+One ``Scenario`` object describes (model x use case x platform x
+parallelism x serving optimization); ``Sweep`` builds grids around it and
+``run()`` prices every cell through the analytical backend in parallel —
+the same object lowers onto the real JAX ``ServeEngine`` via
+``run(..., backend="engine")``.  This script estimates TTFT / TPOT /
+throughput / energy for LLaMA3-70B chat serving on an HGX-H100 node,
+sweeps tensor parallelism, prints the §VI platform requirements for
+GPT-4-class models, and prices chunked-prefill iterations (§IV-A).
 """
 
 import sys
@@ -12,47 +17,61 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.core import GenZ, Workload, paper_model
-from repro.core.requirements import platform_requirements
-from repro.core.usecases import use_case
+from repro.core import Workload
+from repro.scenario import ChunkedSpec, Scenario, Sweep, run
+
+FP8 = dict(weight_dtype="fp8", act_dtype="fp8", kv_dtype="fp8")
 
 
 def main() -> None:
-    g = GenZ.hgx_h100(8).with_opt(weight_dtype="fp8", act_dtype="fp8",
-                                  kv_dtype="fp8")
+    base = Scenario.make("llama3-70b", use_case="chat", batch=16,
+                         platform="hgx-h100x8", opt=FP8)
 
     print("== llama3-70b, chat (3000 in / 1000 out), batch 16 ==")
-    for tp in (2, 4, 8):
-        rep = g.estimate("llama3-70b", use_case="chat", batch=16,
-                         parallelism=dict(tp=tp))
-        fits = "fits" if rep.decode.memory.fits else "OOM "
-        print(f"  TP={tp}:  TTFT {rep.ttft*1e3:7.1f} ms | "
-              f"TPOT {rep.tpot*1e3:6.2f} ms | "
-              f"{rep.throughput:7.0f} tok/s | "
-              f"{rep.energy_per_token:5.2f} J/tok | {fits}")
+    for rep in run(Sweep(base).over(tp=[2, 4, 8])):
+        fits = "fits" if rep.fits_memory else "OOM "
+        print(f"  TP={rep.scenario.parallelism.tp}:  "
+              f"TTFT {rep.ttft_s*1e3:7.1f} ms | "
+              f"TPOT {rep.tpot_s*1e3:6.2f} ms | "
+              f"{rep.throughput_tok_s:7.0f} tok/s | "
+              f"{rep.energy_per_token_j:5.2f} J/tok | {fits}")
 
     print("\n== decode runtime breakdown (TP=8) ==")
-    dec = g.decode("llama3-70b", use_case="chat", batch=16,
-                   parallelism=dict(tp=8))
-    for part, t in dec.timing.breakdown().items():
+    rep, = run([base.replace(parallelism=dict(tp=8))])
+    for part, t in rep.extra["decode"]["breakdown"].items():
         print(f"  {part:12s} {t*1e3:7.2f} ms")
 
     print("\n== §VI platform requirements, QA+RAG use case ==")
-    for name in ("llama3-8b", "llama3-70b", "gpt3-175b", "gpt4-1.8t"):
-        req = platform_requirements(paper_model(name), use_case("qa_rag", 1))
-        print(f"  {name:12s} {req.mem_capacity_gb:8.0f} GB | "
-              f"{req.compute_pflops:6.1f} PFLOPS | "
-              f"{req.mem_bw_tbps:5.1f} TB/s")
+    reqs = Sweep(Scenario.make("llama3-8b", use_case="qa_rag", batch=1,
+                               opt=FP8)).over(
+        model=["llama3-8b", "llama3-70b", "gpt3-175b", "gpt4-1.8t"])
+    for rep in run(reqs):
+        q = rep.extra["requirements"]
+        print(f"  {rep.scenario.model_name:12s} "
+              f"{q['mem_capacity_gb']:8.0f} GB | "
+              f"{q['compute_pflops']:6.1f} PFLOPS | "
+              f"{q['mem_bw_tbps']:5.1f} TB/s")
 
     print("\n== chunked prefill (paper §IV-A), llama3-70b ==")
     for dec_b in (1, 32, 128):
-        r = g.chunked("llama3-70b", chunk=512, decode_batch=dec_b,
-                      workload=Workload(batch=dec_b, tau_p=4096, tau_d=1024),
-                      parallelism=dict(tp=8))
-        br = r.timing.breakdown()
-        print(f"  decode_batch={dec_b:3d}: iter {r.time*1e3:6.2f} ms "
+        sc = Scenario.make(
+            "llama3-70b", workload=Workload(batch=dec_b, tau_p=4096,
+                                            tau_d=1024),
+            batch=dec_b, platform="hgx-h100x8", parallelism=dict(tp=8),
+            opt=FP8, mode="chunked",
+            chunked=ChunkedSpec(chunk=512, decode_batch=dec_b))
+        rep, = run([sc])
+        br = rep.extra["chunked"]["breakdown"]
+        print(f"  decode_batch={dec_b:3d}: "
+              f"iter {rep.extra['chunked']['time_s']*1e3:6.2f} ms "
               f"(linear {br['linear']*1e3:5.2f}, "
               f"attn {br['attention']*1e3:5.2f})")
+
+    print("\n== same Scenario, JSON round trip ==")
+    blob = base.to_json()
+    assert Scenario.from_json(blob) == base
+    print(f"  Scenario.from_json(to_json()) == scenario "
+          f"({len(blob)} bytes)")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 gate + serving perf smoke, in one command:
+# Tier-1 gate + bench smoke, in one command:
 #   scripts/ci.sh
-# Regressions in either the test suite or the serving hot path show up here.
+# Regressions in the test suite, the analytical figures, the Scenario
+# serialization contract, or the serving hot path all show up here.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -9,6 +10,29 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q
+
+echo "== paper-figure benches (smoke grids via Sweep) =="
+python benchmarks/run.py --smoke
+
+echo "== Scenario JSON round trip =="
+python - <<'EOF'
+from repro.scenario import ChunkedSpec, DisaggSpec, Scenario, SpeculativeSpec
+
+base = Scenario.make("llama3-70b", use_case="chat", batch=16,
+                     platform="hgx-h100x8", parallelism=dict(tp=8),
+                     opt=dict(weight_dtype="fp8", act_dtype="fp8",
+                              kv_dtype="fp8"))
+scenarios = [
+    base,
+    base.replace(mode="chunked", chunked=ChunkedSpec(512, 32)),
+    base.replace(mode="speculative",
+                 speculative=SpeculativeSpec("llama3-8b", 4, 0.9)),
+    base.replace(mode="disaggregated", disaggregated=DisaggSpec()),
+]
+for sc in scenarios:
+    assert Scenario.from_json(sc.to_json()) == sc, sc.mode
+print(f"round-tripped {len(scenarios)} scenarios (all modes) OK")
+EOF
 
 echo "== serving benchmark (smoke) =="
 python benchmarks/serving_bench.py --smoke > /dev/null

@@ -4,6 +4,10 @@ LLM inference/training framework.
 Reproduction of "Demystifying AI Platform Design for Distributed Inference of
 Next-Generation LLM models" (GenZ).  Two coupled halves:
 
+  * :mod:`repro.scenario` — the declarative surface: one ``Scenario``
+    record maps (model x use case x platform x parallelism x serving
+    optimization) to metrics; ``Sweep`` builds pruned grids and ``run()``
+    evaluates them against either half (``analytical`` | ``engine``).
   * :mod:`repro.core`     — the paper's analytical model (profiler, NPU and
     platform characterizers, roofline Eq. 1, energy Eq. 2, §VI requirement
     estimation, §IV/§VII case-study machinery).

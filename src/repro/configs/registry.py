@@ -36,7 +36,7 @@ def _module(arch_id: str):
     try:
         rel = _ARCH_MODULES[arch_id]
     except KeyError:
-        raise KeyError(
+        raise ValueError(
             f"unknown arch {arch_id!r}; assigned archs: {sorted(_ARCH_MODULES)}"
             f"; paper models: {sorted(PAPER_MODELS)}") from None
     return importlib.import_module(rel, package=__package__)

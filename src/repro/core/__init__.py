@@ -8,7 +8,11 @@ Layout (paper Fig. 2):
   - :mod:`repro.core.roofline`   — Eq. (1) timing + Eq. (2) energy
   - :mod:`repro.core.stages`     — prefill / decode / chunked / speculative
   - :mod:`repro.core.requirements` — §VI platform requirement estimation
-  - :mod:`repro.core.genz`       — user-facing facade
+  - :mod:`repro.core.genz`       — deprecated facade (use repro.scenario)
+
+The user-facing surface is :mod:`repro.scenario`: a declarative
+``Scenario`` record + ``Sweep`` grids + ``run()`` route here for the
+analytical backend and to the live ``ServeEngine`` for measured runs.
 """
 
 from .genz import GenZ

@@ -137,6 +137,20 @@ def plan_disaggregated(spec: ModelSpec, platform: Platform, wl: Workload,
     return plans
 
 
+def plan_scenario(scenario) -> list[DisaggPlan]:
+    """Disaggregation plans for a declarative
+    :class:`repro.scenario.Scenario` with ``mode='disaggregated'`` (any
+    mode is accepted; the DisaggSpec defaults apply when absent)."""
+    d = scenario.disaggregated
+    kw = {}
+    if d is not None:
+        kw = dict(total_npus=d.total_npus, inter_pool_bw=d.inter_pool_bw,
+                  tp_options=d.tp_options)
+    return plan_disaggregated(scenario.resolve_model(),
+                              scenario.resolve_platform(),
+                              scenario.workload, scenario.opt, **kw)
+
+
 def colocated_goodput(spec: ModelSpec, platform: Platform, wl: Workload,
                       opt: Optimizations | None = None,
                       total_npus: int | None = None,

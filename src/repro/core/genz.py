@@ -1,59 +1,65 @@
-"""GenZ facade: the one-stop API tying profiler + NPU + platform together
-(paper Fig. 2).
+"""GenZ facade — DEPRECATED in favor of :mod:`repro.scenario`.
 
-    >>> from repro.core import genz
+The one-stop API tying profiler + NPU + platform together (paper Fig. 2)
+now lives behind the declarative :class:`repro.scenario.Scenario` object
+and its ``run()`` executor; the methods below are thin shims that build a
+Scenario and route it through the same analytical backend, so old callers
+keep working for one release while emitting a :class:`DeprecationWarning`.
+
+Old:
+
     >>> g = genz.GenZ.hgx_h100(8)
     >>> rep = g.estimate("llama3-70b", use_case="chat", batch=16,
     ...                  parallelism=dict(tp=8))
-    >>> rep.ttft, rep.tpot, rep.throughput
+
+New:
+
+    >>> from repro.scenario import Scenario, run
+    >>> sc = Scenario.make("llama3-70b", use_case="chat", batch=16,
+    ...                    platform="hgx-h100x8", parallelism=dict(tp=8))
+    >>> rep, = run([sc], backend="analytical")
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
 
-from . import hardware, network, usecases
-from .hardware import GB, TB, NPU, PowerModel
-from .modelspec import PAPER_MODELS, ModelSpec
-from .network import NetworkDim, Platform
+from .modelspec import ModelSpec
+from .network import Platform
 from .operators import Optimizations
-from .parallelism import ParallelismConfig
-from .stages import (InferenceReport, StageResult, Workload, chunked, decode,
-                     estimate, prefill, speculative_decode)
+from .stages import InferenceReport, StageResult, Workload
 
 
-def _as_spec(model: ModelSpec | str) -> ModelSpec:
-    if isinstance(model, ModelSpec):
-        return model
-    if model in PAPER_MODELS:
-        return PAPER_MODELS[model]
-    # fall back to the assigned-architecture registry
-    from ..configs import registry
-    return registry.get_spec(model)
+def _deprecated(method: str, repl: str) -> None:
+    warnings.warn(
+        f"GenZ.{method}() is deprecated; use repro.scenario ({repl}). "
+        "The shim will be removed one release after the Scenario API "
+        "landed.", DeprecationWarning, stacklevel=3)
 
 
-def _as_par(p) -> ParallelismConfig:
-    if isinstance(p, ParallelismConfig):
-        return p
-    if isinstance(p, dict):
-        return ParallelismConfig(**p)
-    if p is None:
-        return ParallelismConfig()
-    raise TypeError(type(p))
+def _scenario(platform: Platform, opt: Optimizations, model, *, use_case,
+              workload, batch, parallelism, **kw):
+    from ..scenario import Scenario
+    return Scenario.make(model, use_case=use_case, workload=workload,
+                         batch=batch, platform=platform,
+                         parallelism=parallelism, opt=opt, **kw)
 
 
-def _as_workload(wl, use_case: str | None, batch: int) -> Workload:
-    if isinstance(wl, Workload):
-        return dataclasses.replace(wl, batch=batch)
-    if use_case is not None:
-        return usecases.use_case(use_case, batch=batch)
-    raise ValueError("provide workload= or use_case=")
+def _evaluate(sc):
+    """Route through the scenario analytical backend; surface hard errors
+    the way the old direct-call API did (raise, don't report)."""
+    from ..scenario import analytical
+    rep, detail = analytical.evaluate_detailed(sc)
+    if rep.status in ("infeasible", "error") and rep.error:
+        raise ValueError(rep.error)
+    return rep, detail
 
 
 @dataclass(frozen=True)
 class GenZ:
-    """Analytical LLM-inference platform analyzer."""
+    """Analytical LLM-inference platform analyzer (deprecated facade)."""
 
     platform: Platform
     opt: Optimizations = Optimizations()
@@ -61,36 +67,20 @@ class GenZ:
     # -- constructors --------------------------------------------------------
     @staticmethod
     def hgx_h100(n_gpus: int = 8, eff: float | None = None) -> "GenZ":
-        npu = hardware.h100_sxm()
-        if eff is not None:
-            npu = dataclasses.replace(npu, eff_compute=eff)
-        dims = (NetworkDim("nvlink", n_gpus, 450 * GB, 0.5e-6,
-                           efficiency=0.75, topology="switch"),)
-        return GenZ(Platform(npu=npu, dims=dims,
-                             power=PowerModel(10.2e3 * n_gpus / 8),
-                             name=f"hgx-h100x{n_gpus}"))
+        from ..scenario import platforms
+        return GenZ(platforms.hgx_h100(n_gpus, eff))
 
     @staticmethod
     def tpu_v5e_pod(data: int = 16, model: int = 16, pods: int = 1) -> "GenZ":
         """The production mesh of this repo: (pod, data, model) over v5e
         chips with ~50 GB/s ICI links and a slower inter-pod DCN."""
-        npu = hardware.tpu_v5e()
-        dims = [NetworkDim("ici-model", model, 50 * GB, 1e-6, topology="ring"),
-                NetworkDim("ici-data", data, 50 * GB, 1e-6, topology="ring")]
-        if pods > 1:
-            dims.append(NetworkDim("dcn-pod", pods, 25 * GB, 10e-6,
-                                   topology="switch"))
-        return GenZ(Platform(npu=npu, dims=tuple(dims),
-                             power=PowerModel(200.0 * data * model * pods),
-                             name=f"v5e-{pods}x{data}x{model}"))
+        from ..scenario import platforms
+        return GenZ(platforms.tpu_v5e_pod(data, model, pods))
 
     @staticmethod
     def gb200_node(n: int = 8) -> "GenZ":
-        npu = hardware.gb200_like()
-        dims = (NetworkDim("nvl", n, 900 * GB, 0.5e-6, topology="switch"),
-                NetworkDim("scaleout", 4, 900 * GB, 0.5e-6, topology="switch"))
-        return GenZ(Platform(npu=npu, dims=dims, power=PowerModel(57.2e3),
-                             name=f"gb200x{n}"))
+        from ..scenario import platforms
+        return GenZ(platforms.gb200_node(n))
 
     def with_opt(self, **kw) -> "GenZ":
         return dataclasses.replace(self, opt=dataclasses.replace(self.opt, **kw))
@@ -98,37 +88,59 @@ class GenZ:
     def with_platform(self, platform: Platform) -> "GenZ":
         return dataclasses.replace(self, platform=platform)
 
-    # -- estimation ----------------------------------------------------------
+    # -- estimation (deprecated shims over repro.scenario) -------------------
     def estimate(self, model: ModelSpec | str, *, use_case: str | None = None,
                  workload: Workload | None = None, batch: int = 1,
                  parallelism=None) -> InferenceReport:
-        spec = _as_spec(model)
-        par = _as_par(parallelism)
-        wl = _as_workload(workload, use_case, batch)
-        return estimate(spec, self.platform, par, self.opt, wl)
+        _deprecated("estimate", "Scenario.make(...) + run(...)")
+        sc = _scenario(self.platform, self.opt, model, use_case=use_case,
+                       workload=workload, batch=batch,
+                       parallelism=parallelism)
+        return _evaluate(sc)[1]["report"]
 
     def prefill(self, model, *, workload=None, use_case=None, batch=1,
                 parallelism=None) -> StageResult:
-        return prefill(_as_spec(model), self.platform, _as_par(parallelism),
-                       self.opt, _as_workload(workload, use_case, batch))
+        _deprecated("prefill", "mode='monolithic', Report.extra['prefill']")
+        from .stages import prefill as stage_prefill
+        sc = _scenario(self.platform, self.opt, model, use_case=use_case,
+                       workload=workload, batch=batch,
+                       parallelism=parallelism)
+        # single-stage: don't pay for the decode half of the estimate
+        return stage_prefill(sc.resolve_model(), sc.resolve_platform(),
+                             sc.parallelism, sc.opt, sc.workload)
 
     def decode(self, model, *, workload=None, use_case=None, batch=1,
                parallelism=None, context=None) -> StageResult:
-        return decode(_as_spec(model), self.platform, _as_par(parallelism),
-                      self.opt, _as_workload(workload, use_case, batch),
-                      context=context)
+        _deprecated("decode", "mode='monolithic', Report.extra['decode']")
+        from .stages import decode as stage_decode
+        sc = _scenario(self.platform, self.opt, model, use_case=use_case,
+                       workload=workload, batch=batch,
+                       parallelism=parallelism, context=context)
+        return stage_decode(sc.resolve_model(), sc.resolve_platform(),
+                            sc.parallelism, sc.opt, sc.workload,
+                            context=sc.context)
 
     def chunked(self, model, *, chunk: int, decode_batch: int, workload=None,
                 use_case=None, batch=1, parallelism=None,
                 decode_ctx=None) -> StageResult:
-        return chunked(_as_spec(model), self.platform, _as_par(parallelism),
-                       self.opt, _as_workload(workload, use_case, batch),
-                       chunk, decode_batch, decode_ctx)
+        _deprecated("chunked", "mode='chunked' + ChunkedSpec")
+        from ..scenario import ChunkedSpec
+        sc = _scenario(self.platform, self.opt, model, use_case=use_case,
+                       workload=workload, batch=batch,
+                       parallelism=parallelism, mode="chunked",
+                       chunked=ChunkedSpec(chunk=chunk,
+                                           decode_batch=decode_batch,
+                                           decode_ctx=decode_ctx))
+        return _evaluate(sc)[1]["stage"]
 
     def speculative(self, target, draft, *, n: int, gamma: float,
                     workload=None, use_case=None, batch=1,
                     parallelism=None) -> StageResult:
-        return speculative_decode(
-            _as_spec(target), _as_spec(draft), self.platform,
-            _as_par(parallelism), self.opt,
-            _as_workload(workload, use_case, batch), n, gamma)
+        _deprecated("speculative", "mode='speculative' + SpeculativeSpec")
+        from ..scenario import SpeculativeSpec
+        sc = _scenario(self.platform, self.opt, target, use_case=use_case,
+                       workload=workload, batch=batch,
+                       parallelism=parallelism, mode="speculative",
+                       speculative=SpeculativeSpec(draft=draft, n=n,
+                                                   gamma=gamma))
+        return _evaluate(sc)[1]["stage"]

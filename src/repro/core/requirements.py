@@ -80,3 +80,12 @@ def platform_requirements(spec: ModelSpec, wl: Workload,
         mem_capacity=w + kv, weights_bytes=w, kv_bytes=kv,
         compute=compute_req(spec, wl, opt),
         mem_bw=mem_bw_req(spec, wl, opt))
+
+
+def scenario_requirements(scenario) -> PlatformRequirements:
+    """§VI requirements for a declarative :class:`repro.scenario.Scenario`
+    (the workload must define both SLOs).  The scenario's own dtype
+    optimizations are honored — build the Scenario with fp8 opts to match
+    the paper's §VI assumptions."""
+    spec = scenario.resolve_model()
+    return platform_requirements(spec, scenario.workload, scenario.opt)

@@ -267,16 +267,16 @@ class InferenceReport:
 
 
 def estimate(spec: ModelSpec, platform: Platform, par: ParallelismConfig,
-             opt: Optimizations, wl: Workload) -> InferenceReport:
+             opt: Optimizations, wl: Workload,
+             context: int | None = None) -> InferenceReport:
     """End-to-end request estimate: T_lat = TTFT + TPOT * tau_d."""
     pre = prefill(spec, platform, par, opt, wl)
-    dec = decode(spec, platform, par, opt, wl)
+    dec = decode(spec, platform, par, opt, wl, context=context)
     ttft = pre.time
     tpot = dec.meta["tpot"]
     latency = ttft + tpot * wl.tau_d
-    thr = wl.batch / dec.meta["tpot_throughput"] if dec.meta[
-        "tpot_throughput"] else 0.0
-    thr = wl.batch / dec.meta["tpot_throughput"]
+    thr_t = dec.meta["tpot_throughput"]
+    thr = wl.batch / thr_t if thr_t else 0.0
     total_energy = pre.energy + dec.energy * wl.tau_d
     e_per_tok = total_energy / max(wl.batch * wl.tau_d, 1)
     return InferenceReport(ttft=ttft, tpot=tpot, latency=latency,

@@ -21,5 +21,10 @@ USE_CASES: dict[str, Workload] = {
 
 def use_case(name: str, batch: int = 1) -> Workload:
     import dataclasses
-    wl = USE_CASES[name]
+    try:
+        wl = USE_CASES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown use case {name!r}; valid use cases: "
+            f"{sorted(USE_CASES)}") from None
     return dataclasses.replace(wl, batch=batch)

@@ -1,0 +1,187 @@
+"""Engine backend: lower a Scenario to a real ServeEngine run.
+
+The first bridge between the analytical half and the live JAX serving
+engine: the same :class:`~repro.scenario.Scenario` that the analytical
+backend prices is lowered to an actual continuous-batching run on the
+available devices, and the measured :class:`~repro.serving.EngineMetrics`
+are harvested into the same :class:`~repro.scenario.report.Report` schema
+— so predicted-vs-measured comparison (the paper's validation loop) needs
+no glue code.
+
+Lowering rules:
+
+  * ``model``: an inline ``ModelSpec`` is built as-is; a registry arch id
+    resolves to its CPU-runnable *reduced* config
+    (``registry.get_reduced``).  Paper Table-IV models have no runnable
+    weights and are rejected with a clear error.
+  * the workload's ``tau_p`` / ``tau_d`` / ``batch`` are clamped to the
+    engine geometry (``max_prompt`` / ``max_new`` / engine ``max_seq``) so
+    a chat-sized scenario still produces a finite smoke run; the applied
+    clamps are recorded under ``Report.extra["lowering"]``.
+  * ``mode``: monolithic runs the prompt as one prefill chunk, chunked
+    uses ``ChunkedSpec.chunk`` as the engine chunk size, speculative runs
+    the real draft/target :class:`SpeculativeDecoder`.  Disaggregated
+    serving has no single-host execution and reports ``unsupported``.
+"""
+
+from __future__ import annotations
+
+import time
+
+from .report import Report
+from .scenario import Scenario
+
+#: engine-lowering defaults, overridable via ``run(..., engine_kw=...)``
+DEFAULTS = dict(max_slots=8, max_seq=256, prefill_rows=2, max_prompt=64,
+                max_new=32, n_requests=None, seed=0, temperature=0.0)
+
+
+def lower_model(ref):
+    """Model ref -> runnable (spec, model, params) on the local devices."""
+    import jax
+    import jax.numpy as jnp
+    from ..core.modelspec import PAPER_MODELS, ModelSpec
+    from ..models import build_model
+
+    if isinstance(ref, ModelSpec):
+        spec = ref
+    elif isinstance(ref, str):
+        if ref in PAPER_MODELS:
+            raise ValueError(
+                f"paper model {ref!r} has no runnable reduced config; the "
+                "engine backend needs an inline ModelSpec or a registry "
+                "arch id (repro.configs.registry.ARCH_IDS)")
+        from ..configs import registry
+        spec = registry.get_reduced(ref)
+    else:
+        raise TypeError(f"model ref must be str or ModelSpec, got "
+                        f"{type(ref).__name__}")
+    model = build_model(spec, mesh=None, param_dtype=jnp.float32,
+                        compute_dtype=jnp.float32)
+    return spec, model, model.init(jax.random.key(0))
+
+
+def _geometry(sc: Scenario, kw: dict) -> dict:
+    """Clamp the workload to a runnable engine geometry."""
+    wl = sc.workload
+    max_seq = int(kw["max_seq"])
+    prompt_len = max(1, min(wl.tau_p, int(kw["max_prompt"]), max_seq // 2))
+    max_new = max(1, min(wl.tau_d, int(kw["max_new"]),
+                         max_seq - prompt_len - 2))
+    n_requests = int(kw["n_requests"] or wl.batch)
+    return {"prompt_len": prompt_len, "max_new": max_new,
+            "n_requests": n_requests, "max_seq": max_seq,
+            "clamped": (prompt_len < wl.tau_p or max_new < wl.tau_d)}
+
+
+def evaluate(sc: Scenario, **engine_kw) -> Report:
+    """Scenario -> Report (measured on the real engine)."""
+    kw = dict(DEFAULTS)
+    kw.update(engine_kw)
+    if sc.mode == "disaggregated":
+        return Report(scenario=sc, backend="engine", status="unsupported",
+                      error="disaggregated serving needs multiple hosts; "
+                            "no single-engine lowering exists")
+    try:
+        spec, model, params = lower_model(sc.model)
+    except (ValueError, TypeError) as e:
+        return Report(scenario=sc, backend="engine", status="error",
+                      error=str(e))
+    try:
+        if sc.mode == "speculative":
+            return _run_speculative(sc, spec, model, params, kw)
+        return _run_engine(sc, spec, model, params, kw)
+    except Exception as e:  # noqa: BLE001 - sweeps must survive bad cells
+        return Report(scenario=sc, backend="engine", status="error",
+                      error=f"{type(e).__name__}: {e}")
+
+
+def _make_requests(sc: Scenario, spec, geo: dict, kw: dict):
+    import numpy as np
+    from ..serving import Request
+    from ..serving.sampling import SamplingConfig
+
+    rng = np.random.default_rng(int(kw["seed"]))
+    sampling = SamplingConfig(temperature=float(kw["temperature"]))
+    return [
+        Request(prompt=[int(t) for t in
+                        rng.integers(0, spec.vocab, geo["prompt_len"])],
+                max_new_tokens=geo["max_new"], sampling=sampling)
+        for _ in range(geo["n_requests"])
+    ]
+
+
+def _run_engine(sc: Scenario, spec, model, params, kw: dict) -> Report:
+    import jax
+    from ..serving import EngineConfig, ServeEngine
+
+    geo = _geometry(sc, kw)
+    if sc.mode == "chunked":
+        chunk = max(1, min(sc.chunked.chunk, geo["prompt_len"]))
+    else:  # monolithic: the whole prompt in one prefill chunk
+        chunk = geo["prompt_len"]
+    cfg = EngineConfig(max_slots=int(kw["max_slots"]), max_seq=geo["max_seq"],
+                       chunk_size=chunk, prefill_rows=int(kw["prefill_rows"]))
+    eng = ServeEngine(model, params, cfg, rng=jax.random.key(int(kw["seed"])))
+    reqs = _make_requests(sc, spec, geo, kw)
+    eng.serve(reqs)
+    summary = eng.metrics.summary(reqs)
+    done = [r for r in reqs if r.state == "done"]
+    latency = (sum(r.finish_t - r.submit_t for r in done) / len(done)
+               if done else None)
+    thr = summary["tokens_per_s"]
+    return Report(
+        scenario=sc, backend="engine", status="ok",
+        ttft_s=summary.get("ttft_s_mean"), tpot_s=summary.get("tpot_s_mean"),
+        latency_s=latency, throughput_tok_s=thr,
+        fits_memory=True, meets_slo=_meets(sc, summary),
+        extra={"engine": summary, "lowering": geo,
+               "engine_config": {"max_slots": cfg.max_slots,
+                                 "max_seq": cfg.max_seq,
+                                 "chunk_size": cfg.chunk_size,
+                                 "prefill_rows": cfg.prefill_rows},
+               "model": spec.name})
+
+
+def _run_speculative(sc: Scenario, spec, model, params, kw: dict) -> Report:
+    from ..serving.speculative import SpeculativeDecoder
+
+    d_spec, d_model, d_params = lower_model(sc.speculative.draft)
+    if d_spec.vocab != spec.vocab:
+        return Report(scenario=sc, backend="engine", status="error",
+                      error=f"draft vocab {d_spec.vocab} != target vocab "
+                            f"{spec.vocab}")
+    geo = _geometry(sc, kw)
+    sd = SpeculativeDecoder(model, params, d_model, d_params,
+                            n_spec=sc.speculative.n, max_seq=geo["max_seq"],
+                            temperature=max(float(kw["temperature"]), 0.5))
+    reqs = _make_requests(sc, spec, geo, kw)
+    t0 = time.perf_counter()
+    new_tokens = 0
+    for r in reqs:
+        out = sd.generate(list(r.prompt), geo["max_new"])
+        new_tokens += max(len(out) - len(r.prompt), 0)
+    wall = time.perf_counter() - t0
+    thr = new_tokens / wall if wall > 0 else 0.0
+    tpot = wall / new_tokens if new_tokens else None
+    return Report(
+        scenario=sc, backend="engine", status="ok",
+        tpot_s=tpot, latency_s=wall / max(len(reqs), 1),
+        throughput_tok_s=thr, fits_memory=True,
+        extra={"lowering": geo, "model": spec.name, "draft": d_spec.name,
+               "acceptance_rate": sd.stats.acceptance_rate,
+               "tokens_per_pass": sd.stats.tokens_per_pass,
+               "target_passes": sd.stats.target_passes,
+               "generated_tokens": new_tokens, "wall_s": wall})
+
+
+def _meets(sc: Scenario, summary: dict) -> bool | None:
+    wl = sc.workload
+    if wl.ttft_slo is None and wl.tpot_slo is None:
+        return None
+    ok = True
+    if wl.ttft_slo is not None and summary.get("ttft_s_mean") is not None:
+        ok &= summary["ttft_s_mean"] <= wl.ttft_slo
+    if wl.tpot_slo is not None and summary.get("tpot_s_mean") is not None:
+        ok &= summary["tpot_s_mean"] <= wl.tpot_slo
+    return ok

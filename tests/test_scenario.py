@@ -1,0 +1,279 @@
+"""The declarative Scenario layer: JSON round-trips across all four modes,
+sweep construction + pruning, the analytical backend's equivalence with
+the direct stage calls, parallel == serial execution, and the
+analytical-vs-engine schema unification on a tiny runnable model."""
+
+import json
+import math
+
+import pytest
+
+from repro.core import Optimizations, ParallelismConfig, Workload, paper_model
+from repro.core.stages import decode, estimate, prefill
+from repro.core.usecases import use_case
+from repro.scenario import (ChunkedSpec, DisaggSpec, METRIC_FIELDS, Report,
+                            Scenario, SpeculativeSpec, Sweep, compare,
+                            feasible, resolve_platform, run)
+
+FP8 = dict(weight_dtype="fp8", act_dtype="fp8", kv_dtype="fp8")
+
+
+def _base(**kw):
+    defaults = dict(use_case="chat", batch=4, platform="hgx-h100x8",
+                    parallelism=dict(tp=8), opt=FP8)
+    defaults.update(kw)
+    return Scenario.make("llama3-8b", **defaults)
+
+
+# ---------------------------------------------------------------------------
+# JSON round trip (all four modes, inline refs)
+# ---------------------------------------------------------------------------
+
+def _mode_scenarios():
+    base = _base()
+    return [
+        base,
+        base.replace(mode="chunked",
+                     chunked=ChunkedSpec(chunk=256, decode_batch=8)),
+        base.replace(mode="speculative",
+                     speculative=SpeculativeSpec(draft="llama2-7b", n=4,
+                                                 gamma=0.9)),
+        base.replace(mode="disaggregated",
+                     disaggregated=DisaggSpec(total_npus=8,
+                                              tp_options=(1, 2, 4))),
+    ]
+
+
+@pytest.mark.parametrize("sc", _mode_scenarios(),
+                         ids=[s.mode for s in _mode_scenarios()])
+def test_json_roundtrip_all_modes(sc):
+    blob = sc.to_json()
+    back = Scenario.from_json(blob)
+    assert back == sc
+    # and the payload is genuine JSON (no repr smuggling)
+    assert isinstance(json.loads(blob), dict)
+
+
+def test_json_roundtrip_inline_model_and_platform(tiny_spec):
+    plat = resolve_platform("gb200x8")
+    sc = Scenario.make(tiny_spec, workload=Workload(batch=2, tau_p=16,
+                                                    tau_d=8),
+                       batch=2, platform=plat)
+    back = Scenario.from_json(sc.to_json())
+    assert back == sc
+    assert back.resolve_model() == tiny_spec
+    assert back.resolve_platform() == plat
+
+
+def test_report_json_roundtrip():
+    rep = run([_base()])[0]
+    assert Report.from_json(rep.to_json()) == rep
+
+
+def test_mode_validation():
+    with pytest.raises(ValueError, match="unknown mode"):
+        _base().replace(mode="warp-drive")
+    with pytest.raises(ValueError, match="speculative"):
+        _base().replace(mode="speculative")  # no draft
+
+
+def test_unknown_refs_raise_with_candidates():
+    with pytest.raises(ValueError, match="platform"):
+        resolve_platform("not-a-platform")
+    with pytest.raises(ValueError, match="valid use cases"):
+        use_case("typo")
+    from repro.configs import registry
+    with pytest.raises(ValueError, match="assigned archs"):
+        registry.get_spec("typo")
+
+
+# ---------------------------------------------------------------------------
+# Sweep grids + pruning
+# ---------------------------------------------------------------------------
+
+def test_sweep_grid_size_and_order():
+    grid = Sweep(_base()).over(model=["llama3-8b", "llama3-70b"],
+                               tp=[1, 2, 4])
+    assert grid.size_unpruned == 6
+    scs = grid.scenarios(prune=False)
+    assert len(scs) == 6
+    # first axis is the outer loop
+    assert [s.model_name for s in scs[:3]] == ["llama3-8b"] * 3
+    assert [s.parallelism.tp for s in scs[:3]] == [1, 2, 4]
+
+
+def test_sweep_prunes_infeasible_tp():
+    # hgx-h100x8 has 8 NPUs: tp=16/32 can never run there
+    grid = Sweep(_base()).over(tp=[1, 2, 4, 8, 16, 32])
+    kept, dropped = grid.partition()
+    assert [s.parallelism.tp for s in kept] == [1, 2, 4, 8]
+    assert [s.parallelism.tp for s in dropped] == [16, 32]
+    assert all(feasible(s) for s in kept)
+    assert not any(feasible(s) for s in dropped)
+
+
+def test_sweep_keeps_oom_points():
+    """OOM is a result (paper Fig. 17), not a constraint violation."""
+    sc = Scenario.make("llama3-405b",
+                       workload=Workload(batch=256, tau_p=100_000,
+                                         tau_d=1000),
+                       batch=256, platform="hgx-h100x8",
+                       parallelism=dict(tp=8), opt=FP8)
+    assert feasible(sc)
+    rep, = run([sc])
+    assert rep.status == "oom"
+    assert rep.fits_memory is False
+
+
+def test_sweep_rejects_unknown_axis():
+    with pytest.raises(ValueError, match="unknown sweep axis"):
+        Sweep(_base()).over(warp_factor=[9])
+
+
+def test_sweep_whole_object_axes():
+    """workload=/opt=/parallelism= axes sweep the whole sub-object (and
+    compose with field shortcuts refining them)."""
+    wls = [Workload(batch=2, tau_p=128, tau_d=16),
+           Workload(batch=8, tau_p=512, tau_d=64)]
+    scs = Sweep(_base()).over(workload=wls,
+                              opt=[Optimizations(),
+                                   Optimizations(**FP8)]).scenarios()
+    assert len(scs) == 4
+    assert [s.workload.tau_p for s in scs] == [128, 128, 512, 512]
+    assert {s.opt.weight_dtype for s in scs} == {"bf16", "fp8"}
+    # shortcut refines the swept object
+    scs = Sweep(_base()).over(workload=wls, batch=[1]).scenarios()
+    assert all(s.workload.batch == 1 for s in scs)
+    scs = Sweep(_base()).over(
+        parallelism=[ParallelismConfig(tp=2), ParallelismConfig(tp=4)]
+    ).scenarios()
+    assert [s.parallelism.tp for s in scs] == [2, 4]
+
+
+def test_make_keeps_explicit_workload_batch():
+    wl = Workload(batch=32, tau_p=100, tau_d=10)
+    assert Scenario.make("llama3-8b", workload=wl).workload.batch == 32
+    assert Scenario.make("llama3-8b", workload=wl,
+                         batch=4).workload.batch == 4
+
+
+def test_sweep_use_case_axis_keeps_batch():
+    scs = Sweep(_base(batch=16)).over(
+        use_case=["chat", "qa_rag"]).scenarios()
+    assert [s.workload.name for s in scs] == ["chat", "qa_rag"]
+    assert all(s.workload.batch == 16 for s in scs)
+
+
+# ---------------------------------------------------------------------------
+# Analytical backend: equivalence with the direct stage calls
+# ---------------------------------------------------------------------------
+
+def test_analytical_matches_direct_stage_calls():
+    sc = _base()
+    rep, = run([sc])
+    spec = paper_model("llama3-8b")
+    plat = resolve_platform("hgx-h100x8")
+    par, opt = ParallelismConfig(tp=8), Optimizations(**FP8)
+    wl = use_case("chat", batch=4)
+    pre = prefill(spec, plat, par, opt, wl)
+    dec = decode(spec, plat, par, opt, wl)
+    assert rep.status == "ok"
+    assert rep.ttft_s == pre.time
+    assert rep.tpot_s == dec.meta["tpot"]
+    assert math.isclose(rep.latency_s, pre.time + dec.meta["tpot"] * wl.tau_d,
+                        rel_tol=1e-12)
+    old = estimate(spec, plat, par, opt, wl)
+    assert rep.throughput_tok_s == old.throughput
+    assert rep.energy_j == old.energy
+    assert rep.extra["decode"]["tokens_per_s"] == dec.meta["tokens_per_s"]
+
+
+def test_infeasible_scenario_reports_not_raises():
+    sc = Scenario(model="llama3-8b", workload=use_case("chat", 1),
+                  platform="hgx-h100x8",
+                  parallelism=ParallelismConfig(tp=64))
+    rep, = run([sc])
+    assert rep.status == "infeasible"
+    assert "64" in rep.error
+
+
+def test_parallel_equals_serial():
+    grid = Sweep(_base()).over(model=["llama3-8b", "llama3-70b"],
+                               tp=[1, 2, 4, 8],
+                               use_case=["chat", "qa_rag"])
+    scs = grid.scenarios()
+    assert len(scs) == 16
+    serial = run(scs, max_workers=1)
+    parallel = run(scs, max_workers=2)
+    assert serial == parallel
+
+
+def test_deprecated_genz_shim_still_works():
+    from repro.core import GenZ
+    g = GenZ.hgx_h100(8).with_opt(**FP8)
+    with pytest.warns(DeprecationWarning):
+        old = g.estimate("llama3-8b", use_case="chat", batch=4,
+                         parallelism=dict(tp=8))
+    rep, = run([_base()])
+    assert old.ttft == rep.ttft_s and old.tpot == rep.tpot_s
+
+
+# ---------------------------------------------------------------------------
+# Engine backend: the analytical/measured bridge
+# ---------------------------------------------------------------------------
+
+ENGINE_KW = dict(max_slots=4, max_seq=64, max_prompt=12, max_new=6,
+                 prefill_rows=2)
+
+
+def _tiny_scenario(tiny_spec, **kw):
+    return Scenario.make(tiny_spec,
+                         workload=Workload(batch=3, tau_p=12, tau_d=6),
+                         batch=3, **kw)
+
+
+def test_engine_vs_analytical_same_schema(tiny_spec):
+    """The acceptance one-liner: both backends fill the same Report schema
+    for the same Scenario, so predicted-vs-measured is compare(a, b)."""
+    sc = _tiny_scenario(tiny_spec)
+    ana, = run([sc], backend="analytical")
+    eng, = run([sc], backend="engine", engine_kw=ENGINE_KW)
+    assert ana.status == "ok" and eng.status == "ok"
+    assert ana.backend == "analytical" and eng.backend == "engine"
+    assert set(ana.metrics()) == set(eng.metrics()) == set(METRIC_FIELDS)
+    # the shared serving metrics are populated on both sides
+    for f in ("ttft_s", "tpot_s", "throughput_tok_s"):
+        assert getattr(ana, f) is not None, f
+        assert getattr(eng, f) is not None, f
+        assert getattr(eng, f) > 0, f
+    errs = compare(ana, eng)
+    assert "throughput_tok_s" in errs and errs["throughput_tok_s"] >= 0
+    # measured run really came from the engine
+    assert eng.extra["engine"]["generated_tokens"] > 0
+    assert eng.extra["engine"]["requests_done"] == 3
+    # and the measured report survives JSON
+    assert Report.from_json(eng.to_json()) == eng
+
+
+def test_engine_backend_chunked_mode(tiny_spec):
+    sc = _tiny_scenario(tiny_spec, mode="chunked",
+                        chunked=ChunkedSpec(chunk=4, decode_batch=2))
+    rep, = run([sc], backend="engine", engine_kw=ENGINE_KW)
+    assert rep.status == "ok"
+    assert rep.extra["engine_config"]["chunk_size"] == 4
+    assert rep.extra["engine"]["prefill_calls"] >= 3  # 12 tokens / 4-chunks
+
+
+def test_engine_backend_unsupported_and_errors(tiny_spec):
+    disagg = _tiny_scenario(tiny_spec, mode="disaggregated")
+    rep, = run([disagg], backend="engine")
+    assert rep.status == "unsupported"
+    paper = Scenario.make("llama3-70b", use_case="chat", batch=1)
+    rep, = run([paper], backend="engine")
+    assert rep.status == "error"
+    assert "reduced" in rep.error
+
+
+def test_run_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="unknown backend"):
+        run([_base()], backend="quantum")

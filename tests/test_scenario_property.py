@@ -1,0 +1,92 @@
+"""Property-based tests (hypothesis) for the Scenario sweep layer."""
+
+import math
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra; see requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import Workload  # noqa: E402
+from repro.scenario import (ChunkedSpec, Scenario, SpeculativeSpec, Sweep,  # noqa: E402
+                            feasible)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+MODELS = ["llama3-8b", "llama3-70b", "mixtral-8x7b"]
+
+
+def _base():
+    return Scenario.make("llama3-8b", use_case="chat", batch=1,
+                         platform="hgx-h100x8")
+
+
+@given(n_models=st.integers(1, 3), tps=st.lists(
+    st.sampled_from([1, 2, 4, 8, 16]), min_size=1, max_size=5, unique=True),
+    batches=st.lists(st.integers(1, 64), min_size=1, max_size=3,
+                     unique=True))
+@settings(**SETTINGS)
+def test_unpruned_grid_size_is_axis_product(n_models, tps, batches):
+    grid = Sweep(_base()).over(model=MODELS[:n_models], tp=tps,
+                               batch=batches)
+    scs = grid.scenarios(prune=False)
+    assert len(scs) == n_models * len(tps) * len(batches)
+    assert grid.size_unpruned == len(scs)
+    # every grid point is distinct
+    assert len(set(scs)) == len(scs)
+
+
+@given(tps=st.lists(st.sampled_from([1, 2, 4, 8, 16, 32, 64]), min_size=1,
+                    max_size=7, unique=True))
+@settings(**SETTINGS)
+def test_pruning_partitions_the_grid(tps):
+    grid = Sweep(_base()).over(tp=tps)
+    kept, dropped = grid.partition()
+    assert len(kept) + len(dropped) == len(tps)
+    assert kept == grid.scenarios()
+    # hgx-h100x8: exactly the tp degrees that fit 8 NPUs survive
+    assert sorted(s.parallelism.tp for s in kept) == sorted(
+        t for t in tps if t <= 8)
+    assert all(feasible(s) for s in kept)
+    assert not any(feasible(s) for s in dropped)
+
+
+@given(batch=st.integers(1, 512), tau_p=st.integers(1, 100_000),
+       tau_d=st.integers(1, 10_000), beam=st.integers(1, 8),
+       tp=st.sampled_from([1, 2, 4, 8]),
+       mode=st.sampled_from(["monolithic", "chunked", "speculative",
+                             "disaggregated"]))
+@settings(**SETTINGS)
+def test_json_roundtrip_property(batch, tau_p, tau_d, beam, tp, mode):
+    kw = {}
+    if mode == "chunked":
+        kw["chunked"] = ChunkedSpec(chunk=max(batch, 2), decode_batch=batch)
+    if mode == "speculative":
+        kw["speculative"] = SpeculativeSpec(draft="llama3-8b", n=4,
+                                            gamma=0.5)
+    sc = Scenario.make("llama3-70b",
+                       workload=Workload(batch=batch, tau_p=tau_p,
+                                         tau_d=tau_d, beam=beam),
+                       batch=batch, parallelism=dict(tp=tp), mode=mode, **kw)
+    back = Scenario.from_json(sc.to_json())
+    assert back == sc
+    assert back.workload.tau_p == tau_p
+    assert back.parallelism.tp == tp
+
+
+@given(tau_p=st.integers(64, 32_768), batch=st.integers(1, 32))
+@settings(max_examples=10, deadline=None)
+def test_analytical_metrics_positive_and_consistent(tau_p, batch):
+    from repro.scenario import run
+    sc = Scenario.make("llama3-8b",
+                       workload=Workload(batch=batch, tau_p=tau_p,
+                                         tau_d=128),
+                       batch=batch, parallelism=dict(tp=8),
+                       opt=dict(weight_dtype="fp8", act_dtype="fp8",
+                                kv_dtype="fp8"))
+    rep, = run([sc], max_workers=1)
+    assert rep.status in ("ok", "oom")
+    assert rep.ttft_s > 0 and rep.tpot_s > 0
+    assert math.isclose(rep.latency_s, rep.ttft_s + rep.tpot_s * 128,
+                        rel_tol=1e-9)
+    assert rep.energy_per_token_j > 0

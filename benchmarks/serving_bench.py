@@ -7,6 +7,16 @@ trajectory (tokens/s, TTFT, TPOT, slot occupancy per cell).
     PYTHONPATH=src python benchmarks/serving_bench.py --smoke    # CI smoke
     PYTHONPATH=src python benchmarks/serving_bench.py --out r.json
     PYTHONPATH=src python benchmarks/serving_bench.py --scenario sc.json
+    PYTHONPATH=src python benchmarks/serving_bench.py --paged    # paged KV
+    PYTHONPATH=src python benchmarks/serving_bench.py --compare-paged \
+        --out artifacts/benchmarks/paged_kv.json   # dense-vs-paged capacity
+
+Every cell reports peak KV bytes and cache utilization alongside
+throughput/latency (``kv_reserved_bytes`` / ``kv_peak_bytes`` /
+``kv_utilization_mean``), for the dense and the paged layout alike.
+``--compare-paged`` runs the same workload through a dense engine and a
+paged engine holding the *same HBM token budget* and records the
+concurrency / utilization win (the paper's §V memory-capacity lever).
 
 The engine under test is constructed by *lowering a Scenario*
 (``repro.scenario``): either one loaded from ``--scenario`` (a
@@ -22,6 +32,7 @@ retrace), with metrics reset per cell.
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import sys
 import time
@@ -62,7 +73,15 @@ def build_scenario(args):
                                              decode_batch=args.slots))
 
 
-def build_engine(sc, args):
+def page_size(args, sc) -> int:
+    """Effective KV page size: an explicit --page-size wins, then a paged
+    Scenario's own kv_page_size, then the default."""
+    if args.page_size is not None:
+        return args.page_size
+    return sc.opt.kv_page_size if sc.opt.paged_kv else 16
+
+
+def build_engine(sc, args, layout=None):
     """Lower the Scenario to a live engine (shared with the scenario
     engine backend, so bench and backend measure the same thing)."""
     from repro.scenario.engine_backend import lower_model
@@ -75,9 +94,15 @@ def build_engine(sc, args):
     spec, model, params = lower_model(sc.model)
     chunk = (sc.chunked.chunk if sc.mode == "chunked" and sc.chunked
              else args.chunk)
+    layout = layout or ("paged" if (args.paged or sc.opt.paged_kv)
+                        else "dense")
+    paging = {}
+    if layout == "paged":
+        paging = dict(cache_layout="paged", page_size=page_size(args, sc),
+                      n_pages=args.n_pages)
     cfg = EngineConfig(max_slots=args.slots, max_seq=args.max_seq,
                        chunk_size=min(chunk, args.max_seq),
-                       prefill_rows=args.prefill_rows)
+                       prefill_rows=args.prefill_rows, **paging)
     return spec, ServeEngine(model, params, cfg, rng=jax.random.key(1))
 
 
@@ -94,6 +119,8 @@ def run_cell(eng: ServeEngine, vocab: int, rate: float, mix: str,
     reqs = [Request(prompt=p, max_new_tokens=max_new) for p in prompts]
 
     eng.metrics = EngineMetrics()  # per-cell metrics window
+    if eng.paged:  # the allocator's peak is lifetime-monotonic: re-base it
+        eng.pager.peak_in_use = eng.pager.pages_in_use
     t0 = time.perf_counter()
     i = 0
     while i < len(reqs) or eng.queue or eng.active or eng._prefilling:
@@ -112,7 +139,64 @@ def run_cell(eng: ServeEngine, vocab: int, rate: float, mix: str,
             "max_new_tokens": max_new, "cell_wall_s": wall,
             "prompt_tokens": sum(len(p) for p in prompts)}
     cell.update(eng.metrics.summary(reqs))
+    cell.update(eng.kv_stats())  # peak KV bytes + reservation per layout
     return cell
+
+
+def compare_paged(sc, args) -> dict:
+    """Dense vs paged under the same HBM token budget (the tentpole's
+    acceptance number): the dense engine reserves slots x max_seq tokens;
+    the paged engine gets exactly that many tokens as pages plus a wide
+    scheduling limit, and the win is how many more requests it keeps
+    resident (peak_active) and how much less KV it touches at peak."""
+    from repro.scenario.engine_backend import lower_model
+
+    spec, model, params = lower_model(sc.model)
+    budget_tokens = args.slots * args.max_seq
+    ps = page_size(args, sc)
+    rng = np.random.default_rng(args.seed)
+
+    def workload():
+        lo, hi = MIXES["mixed"]
+        return [Request(prompt=[int(t) for t in rng.integers(
+                    0, spec.vocab, size=int(r))],
+                        max_new_tokens=args.max_new)
+                for r in rng.integers(lo, hi, size=args.requests)]
+
+    rng_state = rng.bit_generator.state
+    out = {"budget_tokens": budget_tokens, "max_seq": args.max_seq,
+           "page_size": ps, "n_requests": args.requests}
+    outputs: dict[str, list] = {}
+    for layout in ("dense", "paged"):
+        rng.bit_generator.state = rng_state  # identical request sets
+        if layout == "dense":
+            cfg = EngineConfig(max_slots=args.slots, max_seq=args.max_seq,
+                               chunk_size=args.chunk,
+                               prefill_rows=args.prefill_rows)
+        else:
+            cfg = EngineConfig(
+                max_slots=min(args.requests, 4 * args.slots),
+                max_seq=args.max_seq, chunk_size=args.chunk,
+                prefill_rows=args.prefill_rows, cache_layout="paged",
+                page_size=ps, n_pages=budget_tokens // ps + 1)
+        eng = ServeEngine(model, params, cfg, rng=jax.random.key(1))
+        reqs = eng.serve(workload())
+        assert all(r.state == "done" for r in reqs)
+        cell = eng.metrics.summary(reqs)
+        cell.update(eng.kv_stats())
+        outputs[layout] = [list(r.output) for r in reqs]
+        cell["outputs_sha1"] = hashlib.sha1(
+            repr(outputs[layout]).encode()).hexdigest()
+        out[layout] = cell
+    # exact per-request token sequences must match, not just a digest
+    assert outputs["dense"] == outputs["paged"], \
+        "dense and paged engines diverged on the same workload"
+    out["concurrency_win"] = (out["paged"]["peak_active"]
+                              / max(out["dense"]["peak_active"], 1))
+    out["utilization_win"] = (out["paged"]["kv_utilization_mean"]
+                              / max(out["dense"]["kv_utilization_mean"],
+                                    1e-12))
+    return out
 
 
 def main() -> None:
@@ -133,6 +217,16 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--chunk", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV layout")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV page (default: the scenario's "
+                         "kv_page_size, else 16)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="page-pool size (default: dense-equivalent)")
+    ap.add_argument("--compare-paged", action="store_true",
+                    help="dense-vs-paged capacity comparison under the "
+                         "same HBM token budget (skips the rate sweep)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweep for CI: one rate, two mixes")
     ap.add_argument("--out", default=None, help="write JSON here too")
@@ -144,7 +238,30 @@ def main() -> None:
         args.requests = 6
         args.max_new = 8
 
-    sc = build_scenario(args)
+    def scenario_for_run():
+        """Keep the recorded scenario consistent with the engine: --paged
+        promotes the scenario's opt so the JSON never claims a dense
+        scenario next to a paged engine run."""
+        import dataclasses
+        sc = build_scenario(args)
+        if args.paged and not sc.opt.paged_kv:
+            sc = sc.replace(opt=dataclasses.replace(
+                sc.opt, paged_kv=True, kv_page_size=page_size(args, sc)))
+        return sc
+
+    if args.compare_paged:
+        sc = scenario_for_run()
+        report = {"bench": "serving_bench/compare_paged",
+                  "scenario": sc.to_dict(), "smoke": args.smoke,
+                  "result": compare_paged(sc, args)}
+        text = json.dumps(report, indent=2)
+        print(text)
+        if args.out:
+            Path(args.out).write_text(text)
+            print(f"wrote {args.out}", file=sys.stderr)
+        return
+
+    sc = scenario_for_run()
     spec, eng = build_engine(sc, args)
     # warm the jitted programs so cell 0 isn't all compile time
     eng.serve([Request(prompt=[1, 2, 3, 4, 5], max_new_tokens=2)])
@@ -170,7 +287,10 @@ def main() -> None:
         "engine": {"max_slots": eng.cfg.max_slots,
                    "chunk_size": eng.cfg.chunk_size,
                    "prefill_rows": eng.cfg.prefill_rows,
-                   "max_seq": eng.cfg.max_seq},
+                   "max_seq": eng.cfg.max_seq,
+                   "cache_layout": eng.cfg.cache_layout,
+                   "page_size": eng.cfg.page_size,
+                   "n_pages": eng.pager.n_pages if eng.paged else None},
         "smoke": args.smoke,
         "cells": cells,
     }

@@ -37,4 +37,11 @@ EOF
 echo "== serving benchmark (smoke) =="
 python benchmarks/serving_bench.py --smoke > /dev/null
 
+echo "== paged KV: kernels in Pallas interpret mode =="
+python -m pytest tests/test_kernels.py -q -k "paged or decode"
+
+echo "== paged KV: paged-vs-dense greedy equivalence smoke =="
+python benchmarks/serving_bench.py --compare-paged --smoke > /dev/null
+# (compare_paged asserts token-identical outputs before reporting the win)
+
 echo "CI OK"

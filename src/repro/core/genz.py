@@ -32,11 +32,25 @@ from .operators import Optimizations
 from .stages import InferenceReport, StageResult, Workload
 
 
+#: methods that already warned this process — the shims are one release
+#: from removal, and a sweep calling an old method thousands of times
+#: should nag once, not thousands of times
+_WARNED: set[str] = set()
+
+
+def reset_deprecation_warnings() -> None:
+    """Re-arm the one-shot warnings (tests)."""
+    _WARNED.clear()
+
+
 def _deprecated(method: str, repl: str) -> None:
+    if method in _WARNED:
+        return
+    _WARNED.add(method)
     warnings.warn(
-        f"GenZ.{method}() is deprecated; use repro.scenario ({repl}). "
-        "The shim will be removed one release after the Scenario API "
-        "landed.", DeprecationWarning, stacklevel=3)
+        f"GenZ.{method}() is deprecated; use repro.scenario.Scenario + "
+        f"run() ({repl}). The shim will be removed one release after the "
+        "Scenario API landed.", DeprecationWarning, stacklevel=3)
 
 
 def _scenario(platform: Platform, opt: Optimizations, model, *, use_case,

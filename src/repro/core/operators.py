@@ -27,6 +27,11 @@ class Optimizations:
     flash_attention: bool = True  # kernel fusion: no S^2 round-trip to HBM
     kv_window: int | None = None  # sliding-window / segment KV override
     kv_prune: float = 0.0  # fraction of cached tokens pruned (lossy)
+    #: paged KV cache (PagedAttention family): capacity scales with tokens
+    #: used instead of slots reserved; internal fragmentation is bounded by
+    #: one page per request (lossless — changes capacity, not math)
+    paged_kv: bool = False
+    kv_page_size: int = 16  # tokens per page when paged_kv is set
     weight_sparsity: float = 0.0  # fraction of weights removed (lossy)
     beam: int = 1  # beam width S_b
     allreduce_decomposed: bool = False  # AR -> RS + AG (paper §III-C)

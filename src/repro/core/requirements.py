@@ -7,6 +7,12 @@ be the bottleneck):
   memory capacity  :  weights + KV cache                      (§VI-A)
   compute          :  prefill FLOPs / TTFT                    (§VI-B)
   memory bandwidth :  (active weights + KV) / TPOT            (§VI-C)
+
+With ``opt.paged_kv`` the KV term is paged: each request occupies whole
+``kv_page_size``-token pages (fragmentation <= one page per request), and
+:func:`max_concurrency_req` inverts the capacity formula into the number
+of concurrent requests a memory budget supports — the quantity the paged
+serving engine actually measures.
 """
 
 from __future__ import annotations
@@ -17,7 +23,7 @@ from .modelspec import ModelSpec
 from .operators import Optimizations
 from .parallelism import ParallelismConfig
 from .profiler import PassSpec, model_ops, pass_flops
-from .stages import Workload
+from .stages import Workload, _page_round, concurrency_from_kv_budget
 
 
 @dataclass(frozen=True)
@@ -44,11 +50,31 @@ class PlatformRequirements:
 def memory_capacity_req(spec: ModelSpec, wl: Workload,
                         opt: Optimizations) -> tuple[float, float]:
     """-> (weight bytes, kv bytes).  MEM-CAP ∝ ModelSize + KVcache;
-    KV ∝ B (tau_p + S_b tau_d)."""
+    KV ∝ B (tau_p + S_b tau_d), rounded up to whole pages when paged."""
     w = spec.param_count() * opt.wbytes()
-    kv = spec.kv_cache_bytes(wl.batch, wl.tau_p, wl.tau_d, beam=wl.beam,
-                             dtype=opt.kv_dtype)
+    kv = spec.kv_cache_bytes(
+        wl.batch, _page_round(wl.tau_p + wl.beam * wl.tau_d, opt), 0,
+        dtype=opt.kv_dtype)
     return w, kv
+
+
+def max_concurrency_req(spec: ModelSpec, wl: Workload, opt: Optimizations,
+                        capacity_bytes: float,
+                        reserved_ctx: int | None = None) -> int:
+    """Concurrent requests a ``capacity_bytes`` memory budget supports
+    (§VI-A inverted).  Dense engines reserve ``reserved_ctx`` tokens per
+    slot (their ``max_seq``; default: the workload's full context); paged
+    engines occupy only the pages the actual context needs.
+
+    This is the budget form — one aggregate memory pool, like the other
+    §VI requirement estimators (parallelism assumed not to be the
+    bottleneck).  For a platform + parallelism mapping use
+    :func:`repro.core.stages.max_concurrency`, which shards weights and KV
+    before delegating to the same core."""
+    w = spec.param_count() * opt.wbytes()
+    return concurrency_from_kv_budget(spec, opt, wl,
+                                      max(capacity_bytes - w, 0.0),
+                                      reserved_ctx=reserved_ctx)
 
 
 def compute_req(spec: ModelSpec, wl: Workload, opt: Optimizations) -> float:

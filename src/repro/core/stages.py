@@ -59,6 +59,22 @@ class StageResult:
     meta: dict = field(default_factory=dict)
 
 
+def _page_round(tokens: float, opt: Optimizations) -> float:
+    """Paged KV (PagedAttention family): per-request KV occupancy rounds up
+    to whole pages — internal fragmentation <= one page per request."""
+    if not opt.paged_kv:
+        return tokens
+    ps = max(opt.kv_page_size, 1)
+    return math.ceil(tokens / ps) * ps
+
+
+def _platform_capacity(platform: Platform) -> float:
+    cap = platform.npu.mem.capacity
+    if platform.npu.sram and platform.npu.sram.capacity > cap:
+        cap = platform.npu.sram.capacity
+    return cap
+
+
 def memory_check(spec: ModelSpec, platform: Platform, par: ParallelismConfig,
                  opt: Optimizations, wl: Workload,
                  context: int | None = None) -> MemoryCheck:
@@ -66,17 +82,63 @@ def memory_check(spec: ModelSpec, platform: Platform, par: ParallelismConfig,
     shards = par.tp * par.ep * par.pp  # model sharded over these
     weights = spec.param_count() * opt.wbytes() / shards
     ctx = context if context is not None else wl.tau_p + wl.beam * wl.tau_d
-    kv_total = spec.kv_cache_bytes(wl.batch, ctx, 0, beam=1,
-                                   dtype=opt.kv_dtype)
     if opt.kv_window:
-        kv_total = min(kv_total, spec.kv_cache_bytes(
-            wl.batch, opt.kv_window, 0, dtype=opt.kv_dtype))
+        ctx = min(ctx, opt.kv_window)
+    kv_total = spec.kv_cache_bytes(wl.batch, _page_round(ctx, opt), 0,
+                                   beam=1, dtype=opt.kv_dtype)
     kv = kv_total * (1.0 - opt.kv_prune) / (par.tp * par.pp)
-    cap = platform.npu.mem.capacity
-    if platform.npu.sram and platform.npu.sram.capacity > platform.npu.mem.capacity:
-        cap = platform.npu.sram.capacity
+    cap = _platform_capacity(platform)
     return MemoryCheck(weights_per_npu=weights, kv_per_npu=kv, capacity=cap,
                        fits=(weights + kv) <= cap)
+
+
+def kv_bytes_per_request(spec: ModelSpec, opt: Optimizations,
+                         tokens: float) -> float:
+    """Device bytes one request's KV holds at ``tokens`` context, honoring
+    the kv dtype / window / prune / paging optimizations."""
+    if opt.kv_window:
+        tokens = min(tokens, opt.kv_window)
+    return (spec.kv_cache_bytes(1, _page_round(tokens, opt), 0,
+                                dtype=opt.kv_dtype)
+            * (1.0 - opt.kv_prune))
+
+
+def concurrency_from_kv_budget(spec: ModelSpec, opt: Optimizations,
+                               wl: Workload, kv_budget_bytes: float,
+                               reserved_ctx: int | None = None) -> int:
+    """Shared core of the §VI-A inversion: concurrent requests a KV byte
+    budget supports.  A dense engine reserves ``reserved_ctx`` tokens per
+    slot up front (its ``max_seq``); a paged engine (``opt.paged_kv``)
+    holds only the pages the actual context needs, rounded up."""
+    ctx = wl.tau_p + wl.beam * wl.tau_d
+    if not opt.paged_kv and reserved_ctx is not None:
+        ctx = max(ctx, reserved_ctx)
+    per_req = kv_bytes_per_request(spec, opt, ctx)
+    if per_req <= 0:
+        return 0
+    return int(max(kv_budget_bytes, 0.0) // per_req)
+
+
+def max_concurrency(spec: ModelSpec, platform: Platform,
+                    par: ParallelismConfig, opt: Optimizations, wl: Workload,
+                    *, reserved_ctx: int | None = None) -> int:
+    """Paper §VI-A inverted: the largest number of concurrent requests
+    whose KV fits beside the weights — the capacity question paging
+    answers.
+
+    A **dense** engine reserves ``reserved_ctx`` tokens per slot up front
+    (its ``max_seq``; defaults to the workload's full tau_p + S_b tau_d),
+    whether or not a request ever grows that long.  A **paged** engine
+    (``opt.paged_kv``) holds only the pages the request's actual context
+    needs, rounded up to whole pages — so mixed / short requests stop
+    stranding capacity and max concurrency rises.
+    """
+    shards = par.tp * par.ep * par.pp
+    weights = spec.param_count() * opt.wbytes() / shards
+    cap = _platform_capacity(platform)
+    kv_room = max(cap - weights, 0.0) * par.tp * par.pp
+    return concurrency_from_kv_budget(spec, opt, wl, kv_room,
+                                      reserved_ctx=reserved_ctx)
 
 
 def _resident_bytes(spec: ModelSpec, par: ParallelismConfig,

@@ -1,13 +1,24 @@
-"""Pallas TPU flash-decode kernel: one query token against a long KV cache.
+"""Pallas TPU flash-decode kernels: one query token against a long KV cache.
 
 The decode stage is memory-bound (paper §II-B): the whole cache streams
-from HBM once per token.  This kernel's job is to hit that streaming bound:
+from HBM once per token.  These kernels' job is to hit that streaming bound:
 
   grid = (B * Hkv, n_kv_blocks) — the KV cache is the only large operand;
   each grid step streams one (block_kv, D) K and V tile into VMEM, updates
   the online-softmax partials for all G query heads (VMEM scratch), and the
   final step normalizes.  q (G, D) rides along replicated per block; HBM
   traffic = K + V exactly (the paper's BW_Req numerator).
+
+Two variants share that structure:
+
+  * :func:`pallas_decode_attention` — dense (B, T, Hkv, D) cache, the
+    kv-block index is the grid index itself.
+  * :func:`pallas_paged_decode_attention` — paged (n_pages, page_size,
+    Hkv, D) pool: the per-slot page table rides in as a scalar-prefetch
+    operand and the K/V BlockSpec index maps walk it, so each grid step
+    DMAs exactly the page the slot owns (gathered K/V tiles into VMEM,
+    same online-softmax combine; HBM traffic stays K + V exactly — no
+    materialized per-request linearization).
 
 On real deployments the KV sequence may be sharded across chips (the
 ``inference_seqkv`` policy); each chip then runs this kernel over its local
@@ -118,4 +129,116 @@ def pallas_decode_attention(q, k, v, *, lengths, sm_scale: float | None = None,
         ],
         interpret=interpret,
     )(aux, qr, kr, vr)
+    return o.reshape(b, hkv, g, d).reshape(b, 1, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: the grid walks each slot's page table.
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, sm_scale: float,
+                         page_size: int, n_pages: int, hkv: int):
+    """Grid (B * Hkv, max_pages); ``pt_ref``/``len_ref`` are scalar-prefetch
+    operands, so the K/V index maps already steered this step's DMA to the
+    page the slot owns — the body is the same online-softmax combine as the
+    dense kernel with the page as the kv block."""
+    bh, j = pl.program_id(0), pl.program_id(1)
+    kv_len = len_ref[bh // hkv]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def body():
+        q = q_ref[0].astype(jnp.float32)  # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (page_size, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale  # (G, page_size)
+        kpos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)
+        valid = kpos < kv_len  # (1, page_size)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None]) * valid
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + p.sum(axis=-1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    # pages entirely beyond the valid prefix are skipped (no MXU work);
+    # their table entries point at the null page anyway
+    pl.when(j * page_size < kv_len)(body)
+
+    @pl.when(j == n_pages - 1)
+    def _finish():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def pallas_paged_decode_attention(q, k_pool, v_pool, page_table, lengths, *,
+                                  sm_scale: float | None = None,
+                                  interpret: bool = False) -> jax.Array:
+    """q: (B, 1, Hq, D); k_pool, v_pool: (P, page_size, Hkv, D);
+    page_table: (B, max_pages) int32 page ids (0 = reserved null page);
+    lengths: (B,) valid KV tokens per slot.
+
+    Returns (B, 1, Hq, D).  Equivalent to gathering each slot's pages into
+    a (B, max_pages * page_size, Hkv, D) view and running masked decode
+    attention with kv_len=lengths — but the gather never materializes: the
+    page table is a scalar-prefetch operand and the kv BlockSpec index map
+    reads it, so HBM traffic is exactly the K + V pages each slot owns.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    b, sq, hq, d = q.shape
+    assert sq == 1, "decode kernel processes one token per request"
+    n_pool, ps, hkv, _ = k_pool.shape
+    _, max_pages = page_table.shape
+    g = hq // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+
+    qr = q[:, 0].reshape(b, hkv, g, d).reshape(b * hkv, g, d)
+    # (P, ps, Hkv, D) -> (P, Hkv, ps, D): the head axis must sit before the
+    # page-token axis so one (page, head) tile is a contiguous block
+    kr = jnp.moveaxis(k_pool, 2, 1)
+    vr = jnp.moveaxis(v_pool, 2, 1)
+
+    kernel = functools.partial(_paged_decode_kernel, sm_scale=scale,
+                               page_size=ps, n_pages=max_pages, hkv=hkv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # page_table, lengths
+        grid=(b * hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda bh, j, pt, ln: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, ps, d),
+                         lambda bh, j, pt, ln: (pt[bh // hkv, j],
+                                                bh % hkv, 0, 0)),
+            pl.BlockSpec((1, 1, ps, d),
+                         lambda bh, j, pt, ln: (pt[bh // hkv, j],
+                                                bh % hkv, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda bh, j, pt, ln: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(page_table, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      qr, kr, vr)
     return o.reshape(b, hkv, g, d).reshape(b, 1, hq, d)

@@ -44,6 +44,30 @@ def multi_head_attention(q, k, v, *, causal: bool = True,
     raise ValueError(f"unknown attention impl {impl!r}")
 
 
+def paged_decode_attention(q, k_pool, v_pool, page_table, lengths, *,
+                           sm_scale: float | None = None,
+                           impl: str = "gather", interpret: bool = False):
+    """Single-token decode attention against a paged KV pool.
+
+    q: (B, 1, Hq, D); k_pool, v_pool: (P, page_size, Hkv, D); page_table:
+    (B, max_pages) int32 (page 0 = reserved null page); lengths: (B,)
+    valid KV tokens (including the token just inserted).
+
+      gather : materialize the per-slot linear view, masked softmax (the
+               jnp oracle — what CPU runs)
+      pallas : the TPU kernel walking the page table via scalar prefetch
+    """
+    if impl == "gather":
+        return ref.paged_decode_reference(q, k_pool, v_pool, page_table,
+                                          lengths, sm_scale=sm_scale)
+    if impl == "pallas":
+        from .decode_attention import pallas_paged_decode_attention
+        return pallas_paged_decode_attention(q, k_pool, v_pool, page_table,
+                                             lengths, sm_scale=sm_scale,
+                                             interpret=interpret)
+    raise ValueError(f"unknown paged decode impl {impl!r}")
+
+
 def expert_gemm(x, w, impl: str = "jnp", interpret: bool = False):
     """Batched per-expert GEMM: (E,C,D) @ (E,D,F) -> (E,C,F)."""
     if impl == "jnp":

@@ -112,3 +112,29 @@ def moe_gemm_reference(tokens: jax.Array, w: jax.Array) -> jax.Array:
     """Per-expert batched GEMM oracle: (E, C, D) @ (E, D, F) -> (E, C, F)."""
     return jnp.einsum("ecd,edf->ecf", tokens.astype(jnp.float32),
                       w.astype(jnp.float32)).astype(tokens.dtype)
+
+
+def paged_gather(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """(P, ps, ...) pool + (B, max_pages) table -> (B, max_pages*ps, ...)
+    linearized per-request view.  The single definition of the page
+    linearization: the serving read path (models/attention.py) and the
+    kernel oracle below both use it, so they can never drift apart.  The
+    Pallas paged decode kernel walks the table instead of materializing
+    this."""
+    b, mp = page_table.shape
+    g = jnp.take(pool, page_table.reshape(-1), axis=0, mode="clip")
+    return g.reshape((b, mp * pool.shape[1]) + pool.shape[2:])
+
+
+def paged_decode_reference(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, page_table: jax.Array,
+                           lengths: jax.Array, *,
+                           sm_scale: float | None = None) -> jax.Array:
+    """Paged decode oracle: gather each slot's pages into a linear
+    (B, max_pages * page_size, Hkv, D) view, then run masked decode
+    attention.  q: (B, 1, Hq, D); k_pool, v_pool: (P, page_size, Hkv, D);
+    page_table: (B, max_pages) int32; lengths: (B,) valid KV tokens."""
+    return mha_reference(q, paged_gather(k_pool, page_table),
+                         paged_gather(v_pool, page_table), causal=True,
+                         sm_scale=sm_scale, kv_len=lengths,
+                         q_offset=lengths - 1)

@@ -8,10 +8,21 @@ Three execution paths, selected by ``ModelContext.attn_impl``:
   pallas : the TPU Pallas kernel (``repro.kernels.flash_attention``),
            validated in interpret mode on CPU
 
-KV cache layout: (B, T_max, Hkv, Dh) per layer, left-aligned with a shared
-per-request ``lengths`` vector.  Decode inserts at position ``lengths`` and
-attends with a kv_len mask — GSPMD turns this into head-sharded or
-sequence-sharded attention depending on the sharding policy.
+KV cache layouts (``ModelContext.cache_layout``):
+
+  dense : (B, T_max, Hkv, Dh) per layer, left-aligned with a shared
+          per-request ``lengths`` vector.  Decode inserts at position
+          ``lengths`` and attends with a kv_len mask — GSPMD turns this
+          into head-sharded or sequence-sharded attention depending on the
+          sharding policy.
+  paged : a flat (n_pages, page_size, Hkv, Dh) pool per layer plus a
+          (B, max_pages) page-table indirection shared across layers
+          (:class:`PagedAttnCache`; the host half is
+          :mod:`repro.serving.paging`).  Decode scatters the new token into
+          its slot's current page and attends against the pages the page
+          table names — capacity scales with tokens *used*, not slots
+          reserved.  The int8 ``k_scale`` quantized path is preserved
+          (scale pools page alongside the values).
 """
 
 from __future__ import annotations
@@ -24,6 +35,7 @@ import jax.numpy as jnp
 
 from ..core.modelspec import ModelSpec
 from ..kernels import ops as kops
+from ..kernels.ref import paged_gather
 from .common import KeyGen, ModelContext, apply_rope, dense_init, rms_norm
 
 
@@ -86,6 +98,71 @@ def init_attn_cache(spec: ModelSpec, batch: int, max_len: int, dtype,
 
 jax.tree_util.register_dataclass(
     AttnCache, data_fields=["k", "v", "k_scale", "v_scale"], meta_fields=[])
+
+
+@dataclass(frozen=True)
+class PagedAttnCache:
+    """Per-layer paged KV pool (a pytree).
+
+    ``k``/``v`` are (n_pages, page_size, Hkv, Dh); which pages belong to
+    which request is the engine's page table (carried in
+    ``ModelCache.page_table``, shared by every attention layer).  Page 0 is
+    the reserved null page (see :mod:`repro.serving.paging`).  With int8
+    quantization the (n_pages, page_size, Hkv) scale pools ride along,
+    exactly like the dense layout's scale planes.
+    """
+    k: jax.Array  # (P, page_size, Hkv, Dh)
+    v: jax.Array
+    k_scale: jax.Array | None = None  # (P, page_size, Hkv) f32
+    v_scale: jax.Array | None = None
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+
+jax.tree_util.register_dataclass(
+    PagedAttnCache, data_fields=["k", "v", "k_scale", "v_scale"],
+    meta_fields=[])
+
+
+def init_paged_attn_cache(spec: ModelSpec, n_pages: int, page_size: int,
+                          dtype, quantized: bool = False) -> PagedAttnCache:
+    shape = (n_pages, page_size, spec.n_kv_heads, spec.d_head)
+    if quantized:
+        sshape = (n_pages, page_size, spec.n_kv_heads)
+        return PagedAttnCache(k=jnp.zeros(shape, jnp.int8),
+                              v=jnp.zeros(shape, jnp.int8),
+                              k_scale=jnp.zeros(sshape, jnp.float32),
+                              v_scale=jnp.zeros(sshape, jnp.float32))
+    return PagedAttnCache(k=jnp.zeros(shape, dtype),
+                          v=jnp.zeros(shape, dtype))
+
+
+def paged_insert_rows(paged: PagedAttnCache, dense: AttnCache, row,
+                      pages: jax.Array) -> PagedAttnCache:
+    """Scatter one dense scratch row into the pool pages named by ``pages``.
+
+    ``dense`` is a (R, T, Hkv, Dh) scratch cache (the engine's prefill
+    scratch), ``row`` a traced row index, ``pages`` the (max_pages,) page
+    ids covering that request (0-padded: the tail of the scratch row is
+    zeros and lands on the null page).  T must equal max_pages * page_size.
+    """
+    ps = paged.page_size
+
+    def scat(pool, scr):
+        col = jax.lax.dynamic_slice_in_dim(scr, row, 1, axis=0)[0]  # (T,...)
+        chunks = col.reshape((pages.shape[0], ps) + col.shape[1:])
+        return pool.at[pages].set(chunks.astype(pool.dtype),
+                                  mode="drop", unique_indices=False)
+
+    quant = paged.k_scale is not None
+    return PagedAttnCache(
+        k=scat(paged.k, dense.k), v=scat(paged.v, dense.v),
+        k_scale=scat(paged.k_scale, dense.k_scale) if quant else None,
+        v_scale=scat(paged.v_scale, dense.v_scale) if quant else None)
+
+
 
 
 def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -154,17 +231,71 @@ def _attend(spec: ModelSpec, ctx: ModelContext, q, k, v, *, causal,
         block_kv=ctx.flash_block_kv, causal_skip=ctx.flash_causal_skip)
 
 
+def _paged_attention(spec: ModelSpec, ctx: ModelContext, cache:
+                     "PagedAttnCache", q, k, v, lengths, page_table):
+    """Paged decode step: scatter the new token's K/V into its page, then
+    attend against the pages the table names.  Numerically identical to the
+    dense decode path (same insert-then-masked-attend order; the gathered
+    view has the same width max_pages * page_size as a dense cache row)."""
+    b = q.shape[0]
+    ps = cache.page_size
+    max_pages = page_table.shape[1]
+    quant = cache.k_scale is not None
+    if quant:
+        k_store, k_sc = _quantize_kv(k)
+        v_store, v_sc = _quantize_kv(v)
+    else:
+        k_store, v_store = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
+
+    # page/offset of the token being written (position == lengths); clamp
+    # the page index so garbage slots past max_seq stay in bounds (their
+    # table entries point at the null page anyway).
+    page_idx = jnp.minimum(lengths // ps, max_pages - 1)
+    page_ids = jnp.take_along_axis(page_table, page_idx[:, None],
+                                   axis=1)[:, 0]
+    offs = lengths % ps
+
+    def scat(pool, t):  # t: (B, 1, ...) new-token values
+        return pool.at[page_ids, offs].set(t[:, 0].astype(pool.dtype),
+                                           mode="drop",
+                                           unique_indices=False)
+
+    kc, vc = scat(cache.k, k_store), scat(cache.v, v_store)
+    new_cache = PagedAttnCache(
+        k=kc, v=vc,
+        k_scale=scat(cache.k_scale, k_sc) if quant else None,
+        v_scale=scat(cache.v_scale, v_sc) if quant else None)
+
+    if ctx.attn_impl == "pallas" and not quant:
+        o = kops.paged_decode_attention(q, kc, vc, page_table, lengths + 1,
+                                        impl="pallas")
+    else:
+        ka = paged_gather(kc, page_table)
+        va = paged_gather(vc, page_table)
+        if quant:
+            ka = _dequantize_kv(ka, paged_gather(new_cache.k_scale,
+                                                 page_table), k.dtype)
+            va = _dequantize_kv(va, paged_gather(new_cache.v_scale,
+                                                 page_table), v.dtype)
+        o = _attend(spec, ctx, q, ka, va, causal=spec.attn.causal,
+                    kv_len=lengths + 1, q_offset=lengths)
+    return o, new_cache
+
+
 def attention_block(spec: ModelSpec, ctx: ModelContext, params: dict,
                     x: jax.Array, positions: jax.Array,
-                    cache: AttnCache | None = None,
-                    lengths: jax.Array | None = None
-                    ) -> tuple[jax.Array, AttnCache | None]:
-    """x: (B, S, D).  Three modes:
+                    cache: AttnCache | PagedAttnCache | None = None,
+                    lengths: jax.Array | None = None,
+                    page_table: jax.Array | None = None
+                    ) -> tuple[jax.Array, AttnCache | PagedAttnCache | None]:
+    """x: (B, S, D).  Four modes:
 
       * full pass (cache None): training / encoder forward,
-      * prefill (cache provided, lengths == 0): fills cache[0:S],
-      * decode  (cache provided, S == 1): inserts at ``lengths`` and attends
-        against the cache prefix.
+      * prefill (dense cache, lengths == 0): fills cache[0:S],
+      * decode  (dense cache, S == 1): inserts at ``lengths`` and attends
+        against the cache prefix,
+      * paged decode (PagedAttnCache, S == 1): scatters into the slot's
+        current page and attends via the page table.
     """
     b, s, _ = x.shape
     q, k, v = _project_qkv(spec, ctx, params, x, positions)
@@ -172,6 +303,12 @@ def attention_block(spec: ModelSpec, ctx: ModelContext, params: dict,
     new_cache = None
     if cache is None:
         o = _attend(spec, ctx, q, k, v, causal=spec.attn.causal)
+    elif isinstance(cache, PagedAttnCache):
+        assert s == 1, "the paged layout serves single-token decode; " \
+            "prefill runs on a dense scratch cache and is paged at insert"
+        assert lengths is not None and page_table is not None
+        o, new_cache = _paged_attention(spec, ctx, cache, q, k, v, lengths,
+                                        page_table)
     else:
         # Unified cached path covering prefill (lengths=0), chunked-prefill
         # continuation (lengths=offset, s=chunk) and decode (s=1): insert the

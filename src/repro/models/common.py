@@ -44,6 +44,13 @@ class ModelContext:
     #: carry (in-place token insert) instead of streaming it through xs/ys,
     #: removing the per-layer slice-out/slice-back round trips.
     decode_carry_cache: bool = False
+    #: KV-cache layout: "dense" reserves (B, max_seq) per layer; "paged"
+    #: keeps a flat page pool + page-table indirection so capacity scales
+    #: with tokens used, not slots reserved (paper §V capacity lever).
+    cache_layout: str = "dense"
+    #: tokens per KV page for the paged layout (internal fragmentation is
+    #: bounded by one page per request)
+    kv_page_size: int = 16
 
     def shard(self, x: jax.Array, *logical_axes: str | None) -> jax.Array:
         if self.mesh is None:

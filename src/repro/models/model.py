@@ -25,10 +25,15 @@ from . import transformer as T
 class ModelCache:
     layers: Any  # stacked per-position caches
     lengths: jax.Array  # (B,) valid tokens per request
+    #: (B, max_pages) int32 page table shared by all attention layers when
+    #: the KV layout is paged (None for the dense layout); unused entries
+    #: point at the reserved null page 0.
+    page_table: jax.Array | None = None
 
 
-jax.tree_util.register_dataclass(ModelCache, data_fields=["layers", "lengths"],
-                                 meta_fields=[])
+jax.tree_util.register_dataclass(
+    ModelCache, data_fields=["layers", "lengths", "page_table"],
+    meta_fields=[])
 
 
 @dataclass(frozen=True)
@@ -81,9 +86,12 @@ class Model:
         return sum(x.size for x in jax.tree.leaves(params))
 
     def cache_axes(self) -> ModelCache:
+        layout = self.ctx.cache_layout
         return ModelCache(
-            layers=T.stack_cache_axes(self.spec, self.ctx.kv_quant),
-            lengths=("batch",))
+            layers=T.stack_cache_axes(self.spec, self.ctx.kv_quant,
+                                      layout=layout),
+            lengths=("batch",),
+            page_table=("batch", None) if layout == "paged" else None)
 
     def cache_shardings(self, mesh=None):
         mesh = mesh or self.ctx.mesh
@@ -164,12 +172,35 @@ class Model:
         return total / jnp.maximum(mask.sum(), 1.0)
 
     # -- serving ------------------------------------------------------------------
-    def init_cache(self, batch: int, max_len: int) -> ModelCache:
+    def init_cache(self, batch: int, max_len: int, *,
+                   layout: str | None = None,
+                   n_pages: int | None = None) -> ModelCache:
+        """Serving cache.  ``layout`` defaults to the context's
+        ``cache_layout``; for the paged layout ``n_pages`` sizes the pool
+        (default: capacity-equivalent to the dense reservation, plus the
+        null page)."""
+        layout = layout or self.ctx.cache_layout
+        if layout not in ("dense", "paged"):
+            raise ValueError(f"unknown cache layout {layout!r}")
+        page_table = None
+        if layout == "paged":
+            ps = self.ctx.kv_page_size
+            if max_len % ps:
+                raise ValueError(f"max_len {max_len} must be a multiple of "
+                                 f"kv_page_size {ps}")
+            max_pages = max_len // ps
+            if n_pages is None:
+                n_pages = batch * max_pages + 1  # +1: reserved null page
+            page_table = jnp.zeros((batch, max_pages), jnp.int32)
         layers = T.init_stack_cache(self.spec, batch, max_len,
                                     self.ctx.compute_dtype,
-                                    quantized=self.ctx.kv_quant)
+                                    quantized=self.ctx.kv_quant,
+                                    layout=layout,
+                                    page_size=self.ctx.kv_page_size,
+                                    n_pages=n_pages)
         return ModelCache(layers=layers,
-                          lengths=jnp.zeros((batch,), jnp.int32))
+                          lengths=jnp.zeros((batch,), jnp.int32),
+                          page_table=page_table)
 
     def prefill(self, params, tokens=None, *, embeds=None, cache: ModelCache,
                 lengths=None) -> tuple[jax.Array, ModelCache]:
@@ -189,7 +220,8 @@ class Model:
                                       lengths=jnp.zeros((b,), jnp.int32))
         x = x[jnp.arange(b), lengths - 1]  # last valid position
         logits = self._logits(params, x[:, None])[:, 0]
-        return logits, ModelCache(layers=new_layers, lengths=lengths)
+        return logits, ModelCache(layers=new_layers, lengths=lengths,
+                                  page_table=cache.page_table)
 
     def prefill_chunk(self, params, cache: ModelCache, tokens=None, *,
                       embeds=None) -> tuple[jax.Array, ModelCache]:
@@ -204,10 +236,12 @@ class Model:
         x = self.ctx.shard(x, "batch", "seq_res", "act_embed")
         x, new_layers = T.apply_stack(self.spec, self.ctx, params["layers"],
                                       x, positions, cache=cache.layers,
-                                      lengths=cache.lengths)
+                                      lengths=cache.lengths,
+                                      page_table=cache.page_table)
         logits = self._logits(params, x[:, -1:])[:, 0]
         return logits, ModelCache(layers=new_layers,
-                                  lengths=cache.lengths + s)
+                                  lengths=cache.lengths + s,
+                                  page_table=cache.page_table)
 
     def decode_step(self, params, cache: ModelCache, tokens: jax.Array,
                     *, embeds=None) -> tuple[jax.Array, ModelCache]:
@@ -218,10 +252,12 @@ class Model:
         x = self.ctx.shard(x, "batch", "seq_res", "act_embed")
         x, new_layers = T.apply_stack(self.spec, self.ctx, params["layers"],
                                       x, positions, cache=cache.layers,
-                                      lengths=cache.lengths)
+                                      lengths=cache.lengths,
+                                      page_table=cache.page_table)
         logits = self._logits(params, x)[:, 0]
         return logits, ModelCache(layers=new_layers,
-                                  lengths=cache.lengths + 1)
+                                  lengths=cache.lengths + 1,
+                                  page_table=cache.page_table)
 
 
 def build_model(spec: ModelSpec, mesh=None, policy=None, **ctx_kw) -> Model:

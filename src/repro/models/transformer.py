@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 
 from ..core.modelspec import ModelSpec
-from .attention import (AttnCache, attention_axes, attention_block,
-                        init_attention, init_attn_cache)
+from .attention import (AttnCache, PagedAttnCache, attention_axes,
+                        attention_block, init_attention, init_attn_cache,
+                        init_paged_attn_cache)
 from .common import KeyGen, ModelContext
 from .mlp import init_mlp, mlp_axes, mlp_block
 from .moe import init_moe, moe_axes, moe_block
@@ -102,10 +103,12 @@ def _axes_one(spec: ModelSpec, cls: LayerClass) -> dict:
 
 
 def _apply_one(spec: ModelSpec, ctx: ModelContext, cls: LayerClass,
-               params: dict, x, positions, cache, lengths):
+               params: dict, x, positions, cache, lengths,
+               page_table=None):
     if cls.kind == "attn":
         y, new_cache = attention_block(spec, ctx, params["mixer"], x,
-                                       positions, cache, lengths)
+                                       positions, cache, lengths,
+                                       page_table=page_table)
         x = x + y
     elif cls.kind == "mamba":
         y, new_cache = mamba_block(spec, ctx, params["mixer"], x, cache)
@@ -122,9 +125,15 @@ def _apply_one(spec: ModelSpec, ctx: ModelContext, cls: LayerClass,
 
 
 def _init_cache_one(spec: ModelSpec, cls: LayerClass, batch: int,
-                    max_len: int, dtype, quantized: bool = False):
+                    max_len: int, dtype, quantized: bool = False,
+                    layout: str = "dense", page_size: int = 16,
+                    n_pages: int | None = None):
     if cls.kind == "attn":
+        if layout == "paged":
+            return init_paged_attn_cache(spec, n_pages, page_size, dtype,
+                                         quantized)
         return init_attn_cache(spec, batch, max_len, dtype, quantized)
+    # SSM / conv states are constant-size per request: paging never applies
     if cls.kind == "mamba":
         return init_mamba_cache(spec, batch, dtype)
     return init_rwkv_cache(spec, batch, dtype)
@@ -160,8 +169,14 @@ def stack_axes(spec: ModelSpec) -> dict:
 
 
 def _cache_axes_one(spec: ModelSpec, cls: LayerClass,
-                    quantized: bool = False):
+                    quantized: bool = False, layout: str = "dense"):
     if cls.kind == "attn":
+        if layout == "paged":
+            # the page pool is indexed by page id, not request: only the
+            # kv-head axis is meaningfully shardable
+            kv = ("layers", None, None, "act_kv_heads", None)
+            sc = ("layers", None, None, "act_kv_heads") if quantized else None
+            return PagedAttnCache(k=kv, v=kv, k_scale=sc, v_scale=sc)
         kv = ("layers", "batch", "kv_seq", "act_kv_heads", None)
         sc = ("layers", "batch", "kv_seq", "act_kv_heads") if quantized \
             else None
@@ -174,20 +189,24 @@ def _cache_axes_one(spec: ModelSpec, cls: LayerClass,
                      wkv=("layers", "batch", "ssm_heads", None, None))
 
 
-def stack_cache_axes(spec: ModelSpec, quantized: bool = False) -> dict:
+def stack_cache_axes(spec: ModelSpec, quantized: bool = False,
+                     layout: str = "dense") -> dict:
     period, _ = stack_period(spec)
     classes = layer_classes(spec)[:period]
-    return {f"pos{pos}": _cache_axes_one(spec, cls, quantized)
+    return {f"pos{pos}": _cache_axes_one(spec, cls, quantized, layout)
             for pos, cls in enumerate(classes)}
 
 
 def init_stack_cache(spec: ModelSpec, batch: int, max_len: int, dtype,
-                     quantized: bool = False):
+                     quantized: bool = False, layout: str = "dense",
+                     page_size: int = 16, n_pages: int | None = None):
     period, repeats = stack_period(spec)
     classes = layer_classes(spec)[:period]
     cache: dict[str, Any] = {}
     for pos, cls in enumerate(classes):
-        one = _init_cache_one(spec, cls, batch, max_len, dtype, quantized)
+        one = _init_cache_one(spec, cls, batch, max_len, dtype, quantized,
+                              layout=layout, page_size=page_size,
+                              n_pages=n_pages)
         cache[f"pos{pos}"] = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (repeats,) + x.shape), one)
     return cache
@@ -195,9 +214,10 @@ def init_stack_cache(spec: ModelSpec, batch: int, max_len: int, dtype,
 
 def apply_stack(spec: ModelSpec, ctx: ModelContext, params: dict,
                 x: jax.Array, positions: jax.Array, cache=None,
-                lengths=None):
+                lengths=None, page_table=None):
     """Run all layers.  cache is the stacked pytree from init_stack_cache
-    (or None for a cache-free pass)."""
+    (or None for a cache-free pass).  ``page_table`` is the shared
+    (B, max_pages) indirection when the attention caches are paged."""
     period, repeats = stack_period(spec)
     classes = layer_classes(spec)[:period]
     with_cache = cache is not None
@@ -208,7 +228,8 @@ def apply_stack(spec: ModelSpec, ctx: ModelContext, params: dict,
         for pos, cls in enumerate(classes):
             c_in = c_slice[f"pos{pos}"] if with_cache else None
             x, c_out = _apply_one(spec, ctx, cls, p_slice[f"pos{pos}"], x,
-                                  positions, c_in, lengths)
+                                  positions, c_in, lengths,
+                                  page_table=page_table)
             if with_cache:
                 new_c[f"pos{pos}"] = c_out
         return x, (new_c if with_cache else None)

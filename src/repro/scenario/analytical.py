@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from ..core.stages import (StageResult, chunked, estimate,
+from ..core.stages import (StageResult, chunked, estimate, max_concurrency,
                            speculative_decode)
 from .report import Report
 from .scenario import Scenario
@@ -92,6 +92,10 @@ def evaluate_detailed(sc: Scenario) -> tuple[Report, dict]:
 
 # -- mode handlers -----------------------------------------------------------
 
+def _max_concurrency(sc: Scenario, spec, plat) -> int:
+    return max_concurrency(spec, plat, sc.parallelism, sc.opt, sc.workload)
+
+
 def _monolithic(sc: Scenario, spec, plat) -> tuple[Report, dict]:
     wl = sc.workload
     inf = estimate(spec, plat, sc.parallelism, sc.opt, wl,
@@ -107,6 +111,7 @@ def _monolithic(sc: Scenario, spec, plat) -> tuple[Report, dict]:
         ttft_s=inf.ttft, tpot_s=inf.tpot, latency_s=inf.latency,
         throughput_tok_s=inf.throughput, energy_j=inf.energy,
         energy_per_token_j=inf.energy_per_token,
+        max_concurrency=_max_concurrency(sc, spec, plat),
         fits_memory=dec.memory.fits,
         meets_slo=_meets(sc, inf.ttft, inf.tpot), extra=extra)
     return rep, {"prefill": pre, "decode": dec, "report": inf}
@@ -124,6 +129,7 @@ def _chunked(sc: Scenario, spec, plat) -> tuple[Report, dict]:
         status="ok" if sr.memory.fits else "oom",
         tpot_s=iter_t,  # each decode token waits one fused iteration
         throughput_tok_s=thr, energy_j=sr.energy, energy_per_token_j=e_tok,
+        max_concurrency=_max_concurrency(sc, spec, plat),
         fits_memory=sr.memory.fits, meets_slo=_meets(sc, None, iter_t),
         extra={"chunked": _stage_dict(sr)})
     return rep, {"stage": sr}

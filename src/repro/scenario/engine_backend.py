@@ -22,10 +22,19 @@ Lowering rules:
     uses ``ChunkedSpec.chunk`` as the engine chunk size, speculative runs
     the real draft/target :class:`SpeculativeDecoder`.  Disaggregated
     serving has no single-host execution and reports ``unsupported``.
+  * ``opt.paged_kv`` lowers to the engine's paged KV layout
+    (``cache_layout="paged"``, ``page_size=opt.kv_page_size``).  The pool
+    size comes from ``engine_kw["n_pages"]``, else from an HBM budget
+    (``engine_kw["kv_budget_bytes"]``, default: platform capacity minus
+    weight bytes) divided into pages with the same §VI-A byte formula the
+    analytical backend uses — so predicted-vs-measured **max concurrency**
+    (``Report.max_concurrency``; measured = peak concurrent decode slots)
+    is an apples-to-apples ``compare()``.
 """
 
 from __future__ import annotations
 
+import math
 import time
 
 from .report import Report
@@ -33,7 +42,9 @@ from .scenario import Scenario
 
 #: engine-lowering defaults, overridable via ``run(..., engine_kw=...)``
 DEFAULTS = dict(max_slots=8, max_seq=256, prefill_rows=2, max_prompt=64,
-                max_new=32, n_requests=None, seed=0, temperature=0.0)
+                max_new=32, n_requests=None, seed=0, temperature=0.0,
+                cache_layout=None, page_size=None, n_pages=None,
+                kv_budget_bytes=None)
 
 
 def lower_model(ref):
@@ -111,6 +122,53 @@ def _make_requests(sc: Scenario, spec, geo: dict, kw: dict):
     ]
 
 
+def _paged_lowering(sc: Scenario, spec, geo: dict, kw: dict) -> dict:
+    """Paged-KV engine knobs: layout, page size and the page-pool size.
+
+    The pool is sized from an HBM budget with the same §VI-A per-token
+    byte formula the analytical backend prices (``kv_bytes_per_token`` at
+    ``opt.kv_dtype``), so a Scenario with an inline toy Platform yields an
+    engine whose measured max concurrency is directly comparable to the
+    analytical prediction.  The pool is clamped to the dense-equivalent
+    reservation (pages beyond max_slots x max_seq can never be used).
+    """
+    paged = kw["cache_layout"] == "paged" or (
+        kw["cache_layout"] is None and sc.opt.paged_kv)
+    if not paged:
+        return {"cache_layout": "dense"}
+    ps = int(kw["page_size"] or sc.opt.kv_page_size)
+    max_seq = geo["max_seq"]
+    if max_seq % ps:  # keep the lowering runnable for any page size
+        ps = max(1, math.gcd(max_seq, ps))
+    max_pages_total = int(kw["max_slots"]) * (max_seq // ps)
+    n_pages = kw["n_pages"]
+    if n_pages is None:
+        budget = kw["kv_budget_bytes"]
+        if budget is None:
+            # mirror stages.max_concurrency's sharded §VI-A budget:
+            # (capacity - weights/shards) per NPU, times the tp*pp shards
+            # that split the KV — an unsharded budget would diverge from
+            # the analytical prediction by ~tp*pp for parallel scenarios
+            from ..core.stages import _platform_capacity
+            par = sc.parallelism
+            shards = par.tp * par.ep * par.pp
+            plat = sc.resolve_platform()
+            weights = spec.param_count() * sc.opt.wbytes() / shards
+            budget = max(_platform_capacity(plat) - weights, 0.0) \
+                * par.tp * par.pp
+        # the engine's SSM/conv states are dense per slot and live outside
+        # the page pool: take them off the budget before dividing into
+        # pages (no-op for pure-attention specs; keeps hybrid comparisons
+        # from crediting the pool with bytes the states already spent)
+        budget -= int(kw["max_slots"]) * spec.ssm_state_bytes(
+            sc.opt.kv_dtype)
+        per_page = spec.kv_bytes_per_token(sc.opt.kv_dtype) * ps
+        n_pages = int(max(budget, 0.0) // per_page) + 1 if per_page > 0 \
+            else 2
+    n_pages = max(2, min(int(n_pages), max_pages_total + 1))
+    return {"cache_layout": "paged", "page_size": ps, "n_pages": n_pages}
+
+
 def _run_engine(sc: Scenario, spec, model, params, kw: dict) -> Report:
     import jax
     from ..serving import EngineConfig, ServeEngine
@@ -120,8 +178,10 @@ def _run_engine(sc: Scenario, spec, model, params, kw: dict) -> Report:
         chunk = max(1, min(sc.chunked.chunk, geo["prompt_len"]))
     else:  # monolithic: the whole prompt in one prefill chunk
         chunk = geo["prompt_len"]
+    paging = _paged_lowering(sc, spec, geo, kw)
     cfg = EngineConfig(max_slots=int(kw["max_slots"]), max_seq=geo["max_seq"],
-                       chunk_size=chunk, prefill_rows=int(kw["prefill_rows"]))
+                       chunk_size=chunk, prefill_rows=int(kw["prefill_rows"]),
+                       **paging)
     eng = ServeEngine(model, params, cfg, rng=jax.random.key(int(kw["seed"])))
     reqs = _make_requests(sc, spec, geo, kw)
     eng.serve(reqs)
@@ -134,17 +194,26 @@ def _run_engine(sc: Scenario, spec, model, params, kw: dict) -> Report:
         scenario=sc, backend="engine", status="ok",
         ttft_s=summary.get("ttft_s_mean"), tpot_s=summary.get("tpot_s_mean"),
         latency_s=latency, throughput_tok_s=thr,
+        max_concurrency=summary.get("peak_active"),
         fits_memory=True, meets_slo=_meets(sc, summary),
-        extra={"engine": summary, "lowering": geo,
+        extra={"engine": summary, "lowering": geo, "kv": eng.kv_stats(),
                "engine_config": {"max_slots": cfg.max_slots,
                                  "max_seq": cfg.max_seq,
                                  "chunk_size": cfg.chunk_size,
-                                 "prefill_rows": cfg.prefill_rows},
+                                 "prefill_rows": cfg.prefill_rows,
+                                 **paging},
                "model": spec.name})
 
 
 def _run_speculative(sc: Scenario, spec, model, params, kw: dict) -> Report:
     from ..serving.speculative import SpeculativeDecoder
+
+    if sc.opt.paged_kv or kw["cache_layout"] == "paged":
+        # don't silently measure a dense run under a paged label
+        return Report(scenario=sc, backend="engine", status="unsupported",
+                      error="the speculative decoder runs draft/target on "
+                            "dense caches; paged_kv has no speculative "
+                            "lowering yet")
 
     d_spec, d_model, d_params = lower_model(sc.speculative.draft)
     if d_spec.vocab != spec.vocab:

@@ -20,8 +20,11 @@ from .scenario import Scenario
 
 #: every Report carries these top-level metric fields (None = not
 #: applicable for the mode/backend); the schema the two backends share.
+#: ``max_concurrency`` is the §VI-A capacity question: how many concurrent
+#: requests fit the memory budget (analytical: weights + per-request KV
+#: reservation inverted; engine: peak concurrent decode slots measured).
 METRIC_FIELDS = ("ttft_s", "tpot_s", "latency_s", "throughput_tok_s",
-                 "energy_j", "energy_per_token_j")
+                 "energy_j", "energy_per_token_j", "max_concurrency")
 
 STATUSES = ("ok", "oom", "infeasible", "unsupported", "error")
 
@@ -40,6 +43,7 @@ class Report:
     throughput_tok_s: float | None = None
     energy_j: float | None = None
     energy_per_token_j: float | None = None
+    max_concurrency: float | None = None
     fits_memory: bool | None = None
     meets_slo: bool | None = None
     error: str | None = None

@@ -50,6 +50,7 @@ class Sweep:
                             f"{type(base).__name__}")
         self.base = base
         self._axes: dict[str, list] = {}
+        self._preds: list = []
 
     def over(self, **axes) -> "Sweep":
         """Add sweep axes; values are iterables.  Returns self (chainable)."""
@@ -63,6 +64,27 @@ class Sweep:
                 raise ValueError(f"sweep axis {key!r} has no values")
             self._axes[key] = values
         return self
+
+    def where(self, fn) -> "Sweep":
+        """Add a user predicate ``Scenario -> bool``; grid points it
+        rejects are pruned like infeasible parallelism combos (they never
+        reach a backend).  Use it to cut points that would only ever
+        produce degenerate results — e.g. capacity grids where the prompt
+        exceeds the sequence budget::
+
+            Sweep(base).over(tau_p=[1024, 8192, 65536]) \\
+                       .where(lambda sc: sc.workload.tau_p <= max_seq)
+
+        Chainable; multiple predicates AND together.
+        """
+        if not callable(fn):
+            raise TypeError(f"where() needs a callable Scenario -> bool, "
+                            f"got {type(fn).__name__}")
+        self._preds.append(fn)
+        return self
+
+    def _keep(self, sc: Scenario) -> bool:
+        return feasible(sc) and all(p(sc) for p in self._preds)
 
     # -- grid construction ---------------------------------------------------
     @property
@@ -103,14 +125,15 @@ class Sweep:
     def scenarios(self, prune: bool = True) -> list[Scenario]:
         out = [self._build_one(c) for c in self._combos()]
         if prune:
-            out = [sc for sc in out if feasible(sc)]
+            out = [sc for sc in out if self._keep(sc)]
         return out
 
     def partition(self) -> tuple[list[Scenario], list[Scenario]]:
-        """-> (feasible, pruned) without dropping anything."""
+        """-> (kept, pruned) without dropping anything (pruned covers both
+        infeasible combos and points a ``where`` predicate rejected)."""
         all_ = [self._build_one(c) for c in self._combos()]
-        keep = [sc for sc in all_ if feasible(sc)]
-        drop = [sc for sc in all_ if not feasible(sc)]
+        keep = [sc for sc in all_ if self._keep(sc)]
+        drop = [sc for sc in all_ if not self._keep(sc)]
         return keep, drop
 
     def __iter__(self) -> Iterator[Scenario]:

@@ -1,6 +1,9 @@
 """Serving substrate: continuous-batching engine (batched chunked prefill,
-device-side sampling), speculative decoding, beam search, sampling."""
+device-side sampling, dense or paged KV cache), page allocator,
+speculative decoding, beam search, sampling."""
 
 from .engine import EngineConfig, EngineMetrics, Request, ServeEngine
+from .paging import PageAllocator, pages_for
 
-__all__ = ["EngineConfig", "EngineMetrics", "Request", "ServeEngine"]
+__all__ = ["EngineConfig", "EngineMetrics", "Request", "ServeEngine",
+           "PageAllocator", "pages_for"]

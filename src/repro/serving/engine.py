@@ -38,12 +38,28 @@ Hot-path design (the batched rebuild):
 Wall-clock and step-level metrics (TTFT, TPOT, tokens/s, slot occupancy)
 accumulate in ``engine.metrics``; see ``EngineMetrics.summary``.
 
+**Paged KV cache** (``cache_layout="paged"``): instead of reserving
+``max_slots x max_seq`` KV tokens per layer, the device keeps a flat pool
+of ``page_size``-token pages plus a per-slot page table
+(:mod:`repro.serving.paging`).  Admission switches from "free slot" to
+"free pages for the prompt + headroom"; pages are allocated as sequences
+grow (allocate-on-append) and returned the moment a request finishes
+(free-on-finish).  When the pool runs dry mid-decode, the youngest active
+request is preempted back to the queue (recompute-style: its prompt +
+generated tokens re-prefill on re-admission, so greedy outputs are
+unchanged).  Prefill still runs on the dense scratch rows; a completed
+prompt is scattered into its pages at insert time.  The one-device->host-
+transfer-per-decode-step and no-retrace invariants hold in both layouts
+(the page table is a fixed-shape device array, re-uploaded host->device
+only when it changes).
+
 The scheduler itself stays pure Python and therefore easy to fault-inject
 and test.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import time
 from collections import deque
@@ -54,7 +70,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..compat import tree
+from ..models.attention import PagedAttnCache, paged_insert_rows
 from ..models.model import Model, ModelCache
+from .paging import PageAllocator
 from .sampling import SamplingConfig, sample_slots
 
 
@@ -95,6 +113,14 @@ class EngineConfig:
     decode_priority: bool = True  # decode before prefill chunks (SLO order)
     prefill_rows: int = 2  # concurrent chunked prefills (scratch rows)
     record_step_log: bool = False  # keep a per-step occupancy trace
+    #: KV-cache layout: "dense" reserves max_slots x max_seq tokens per
+    #: layer; "paged" keeps an n_pages pool + page-table indirection
+    cache_layout: str = "dense"
+    page_size: int = 16  # tokens per KV page (paged layout)
+    #: total pool pages including the reserved null page; None sizes the
+    #: pool capacity-equivalent to the dense reservation (the interesting
+    #: configurations set it *lower* — that is the whole point)
+    n_pages: int | None = None
 
 
 @dataclass
@@ -110,6 +136,15 @@ class EngineMetrics:
     occupancy_sum: float = 0.0  # sum over steps of active/max_slots
     steps: int = 0
     step_log: list = field(default_factory=list)  # (step, active, prefill, queued)
+    # -- KV capacity counters (both layouts) --------------------------------
+    peak_active: int = 0  # max concurrent decode slots (measured concurrency)
+    peak_inflight: int = 0  # max active + in-flight prefills
+    kv_util_sum: float = 0.0  # per-step live-KV fraction of the reservation
+    kv_used_tokens_peak: int = 0  # dense layout: peak live cache tokens
+    # -- paged-layout counters ----------------------------------------------
+    preemptions: int = 0  # victims pushed back to the queue (pool ran dry)
+    capacity_stops: int = 0  # requests force-finished (no victim available)
+    pages_in_use_peak: int = 0
 
     @property
     def wall_s(self) -> float:
@@ -123,6 +158,10 @@ class EngineMetrics:
     def mean_occupancy(self) -> float:
         return self.occupancy_sum / self.steps if self.steps else 0.0
 
+    @property
+    def mean_kv_utilization(self) -> float:
+        return self.kv_util_sum / self.steps if self.steps else 0.0
+
     def summary(self, requests=None) -> dict:
         out = {
             "steps": self.steps,
@@ -133,6 +172,13 @@ class EngineMetrics:
             "wall_s": self.wall_s,
             "tokens_per_s": self.tokens_per_s,
             "mean_slot_occupancy": self.mean_occupancy,
+            "peak_active": self.peak_active,
+            "peak_inflight": self.peak_inflight,
+            "kv_utilization_mean": self.mean_kv_utilization,
+            "preemptions": self.preemptions,
+            "capacity_stops": self.capacity_stops,
+            "pages_in_use_peak": self.pages_in_use_peak,
+            "kv_used_tokens_peak": self.kv_used_tokens_peak,
         }
         done = [r for r in (requests or []) if r.state == "done"]
         if done:
@@ -156,6 +202,18 @@ class ServeEngine:
             raise ValueError("EngineConfig.prefill_rows must be >= 1")
         if config.chunk_size < 1:
             raise ValueError("EngineConfig.chunk_size must be >= 1")
+        if config.cache_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown cache_layout "
+                             f"{config.cache_layout!r}")
+        self.paged = config.cache_layout == "paged"
+        if self.paged:
+            if config.max_seq % config.page_size:
+                raise ValueError("paged layout needs max_seq to be a "
+                                 "multiple of page_size")
+            # the model builds paged pools sized by its context knobs
+            model = dataclasses.replace(
+                model, ctx=model.ctx.with_(cache_layout="paged",
+                                           kv_page_size=config.page_size))
         self.model = model
         self.params = params
         self.cfg = config
@@ -168,8 +226,27 @@ class ServeEngine:
         self.steps = 0
         self.metrics = EngineMetrics()
 
-        self.cache = model.init_cache(config.max_slots, config.max_seq)
-        self.scratch = model.init_cache(config.prefill_rows, config.max_seq)
+        self.max_pages = config.max_seq // config.page_size
+        self.pager: PageAllocator | None = None
+        self._ptab = None  # host mirror of the device page table
+        self._ptab_dirty = False
+        if self.paged:
+            n_pages = config.n_pages
+            if n_pages is None:  # capacity-equivalent to dense (+ null page)
+                n_pages = config.max_slots * self.max_pages + 1
+            self.pager = PageAllocator(n_pages=n_pages,
+                                       page_size=config.page_size)
+            self._ptab = np.zeros((config.max_slots, self.max_pages),
+                                  np.int32)
+            self.cache = model.init_cache(config.max_slots, config.max_seq,
+                                          layout="paged", n_pages=n_pages)
+        else:
+            self.cache = model.init_cache(config.max_slots, config.max_seq,
+                                          layout="dense")
+        # prefill always runs on dense scratch rows; completed prompts are
+        # scattered into their pages at insert time
+        self.scratch = model.init_cache(config.prefill_rows, config.max_seq,
+                                        layout="dense")
         # prefill bookkeeping: scratch row -> in-flight request / position
         self._prefills: dict[int, Request] = {}
         self._prefill_pos: dict[int, int] = {}
@@ -191,6 +268,8 @@ class ServeEngine:
         self._jit_prefill = jax.jit(self._prefill_masked,
                                     donate_argnums=(1,))
         self._jit_insert = jax.jit(self._insert, donate_argnums=(0,))
+        self._jit_insert_paged = jax.jit(self._insert_paged,
+                                         donate_argnums=(0,))
         self._jit_reset_row = jax.jit(self._reset_row, donate_argnums=(0,))
         self._jit_sample = jax.jit(sample_slots)
 
@@ -235,6 +314,37 @@ class ServeEngine:
         return ModelCache(layers=layers, lengths=lengths)
 
     @staticmethod
+    def _insert_paged(big: ModelCache, small: ModelCache, slot, row,
+                      pages) -> ModelCache:
+        """Paged insert: scatter scratch row ``row`` into the pool pages
+        named by ``pages`` (attention layers) and copy the row's SSM/conv
+        states into batch slot ``slot`` (state layers are constant-size per
+        request — paging never applies to them).  Also installs the slot's
+        page-table row, so the device table needs no separate upload."""
+        def dense_ins(b, s):
+            col = jax.lax.dynamic_slice_in_dim(s, row, 1, axis=1)
+            idx = (0, slot) + (0,) * (b.ndim - 2)
+            return jax.lax.dynamic_update_slice(b, col.astype(b.dtype), idx)
+
+        new_layers = {}
+        for pos, leaf in big.layers.items():
+            if isinstance(leaf, PagedAttnCache):
+                # leaves carry the leading layer-repeats axis: vmap over it
+                new_layers[pos] = jax.vmap(
+                    paged_insert_rows, in_axes=(0, 0, None, None))(
+                        leaf, small.layers[pos], row, pages)
+            else:
+                new_layers[pos] = tree.map(dense_ins, leaf,
+                                           small.layers[pos])
+        length = jax.lax.dynamic_slice_in_dim(small.lengths, row, 1, axis=0)
+        lengths = jax.lax.dynamic_update_slice(big.lengths, length, (slot,))
+        ptab = jax.lax.dynamic_update_slice(
+            big.page_table, pages[None].astype(big.page_table.dtype),
+            (slot, 0))
+        return ModelCache(layers=new_layers, lengths=lengths,
+                          page_table=ptab)
+
+    @staticmethod
     def _reset_row(scratch: ModelCache, row) -> ModelCache:
         """Zero one scratch row (claimed by a newly admitted prompt)."""
         def z(b):
@@ -249,20 +359,44 @@ class ServeEngine:
 
     # -- public API --------------------------------------------------------------
     def submit(self, req: Request) -> int:
+        if self.paged:
+            need = self.pager.pages_for(len(req.prompt) + 1)
+            # a slot's page-table row holds max_pages entries (= max_seq
+            # tokens) and the pool can never lend more than usable_pages
+            limit = min(self.max_pages, self.pager.usable_pages)
+            if need > limit:
+                raise ValueError(
+                    f"prompt needs {need} pages but a request can hold at "
+                    f"most {limit} (max_pages={self.max_pages}, usable "
+                    f"pool={self.pager.usable_pages})")
         req.rid = next(self._ids)
         req.state = "queued"
         req.submit_t = time.perf_counter()
         self.queue.append(req)
         return req.rid
 
+    @staticmethod
+    def _src(req: Request) -> list[int]:
+        """Prefill token source.  For a preempted request resuming after
+        recompute-style eviction this is prompt + everything generated so
+        far, so greedy outputs continue identically."""
+        return req.prompt + req.output if req.output else req.prompt
+
     # -- scheduling ----------------------------------------------------------
     def _admit(self) -> None:
         """Greedily start prefills: every free scratch row takes a queued
-        prompt, as long as a decode slot is guaranteed at completion."""
+        prompt, as long as a decode slot is guaranteed at completion and —
+        in the paged layout — the pool has free pages for the prompt plus
+        one token of headroom (reserved up front, so concurrent prefills
+        never race for the same pages)."""
         while (self.queue and self._free_rows
                and len(self.active) + len(self._prefills)
                < self.cfg.max_slots):
-            req = self.queue.popleft()
+            req = self.queue[0]
+            if self.paged and not self.pager.ensure(req.rid,
+                                                    len(self._src(req)) + 1):
+                break  # pool dry: wait for frees (decode keeps running)
+            self.queue.popleft()
             row = self._free_rows.pop()
             self._prefills[row] = req
             self._prefill_pos[row] = 0
@@ -282,7 +416,7 @@ class ServeEngine:
         for row in sorted(self._prefills):
             req = self._prefills[row]
             w = min(self.cfg.chunk_size,
-                    len(req.prompt) - self._prefill_pos[row])
+                    len(self._src(req)) - self._prefill_pos[row])
             groups.setdefault(w, []).append(row)
         for w in sorted(groups):
             self._prefill_chunk_group(w, groups[w])
@@ -293,7 +427,7 @@ class ServeEngine:
         mask = np.zeros((nrows,), np.bool_)
         for row in rows:
             lo = self._prefill_pos[row]
-            toks[row] = self._prefills[row].prompt[lo:lo + w]
+            toks[row] = self._src(self._prefills[row])[lo:lo + w]
             mask[row] = True
         logits, self.scratch = self._jit_prefill(
             self.params, self.scratch, jnp.asarray(toks), jnp.asarray(mask))
@@ -302,7 +436,7 @@ class ServeEngine:
         finishing = []
         for row in rows:
             self._prefill_pos[row] += w
-            if self._prefill_pos[row] >= len(self._prefills[row].prompt):
+            if self._prefill_pos[row] >= len(self._src(self._prefills[row])):
                 finishing.append(row)
         if finishing:
             self._finish_prefills(finishing, logits)
@@ -329,21 +463,30 @@ class ServeEngine:
             req = self._prefills.pop(row)
             del self._prefill_pos[row]
             tok = int(first[row])
+            src_len = len(self._src(req))  # tokens the prefill processed
+            if not req.output:  # resumed requests keep their original TTFT
+                req.ttft_steps = self.steps
+                req.first_token_t = now
             req.output.append(tok)
-            req.ttft_steps = self.steps
-            req.first_token_t = now
             self.metrics.generated_tokens += 1
             slot = self.free_slots.pop()
             req.slot = slot
-            self.cache = self._jit_insert(self.cache, self.scratch,
-                                          jnp.int32(slot), jnp.int32(row))
+            if self.paged:
+                pages = self._ptab_row(req.rid)
+                self._ptab[slot] = pages
+                self.cache = self._jit_insert_paged(
+                    self.cache, self.scratch, jnp.int32(slot),
+                    jnp.int32(row), jnp.asarray(pages))
+            else:
+                self.cache = self._jit_insert(self.cache, self.scratch,
+                                              jnp.int32(slot), jnp.int32(row))
             self._free_rows.append(row)
-            self._lengths[slot] = len(req.prompt)
+            self._lengths[slot] = src_len
             if (len(req.output) >= req.max_new_tokens
                     or (req.eos_id is not None and tok == req.eos_id)):
                 req.state = "done"
                 req.finish_t = now
-                self.free_slots.append(slot)
+                self._release_slot(slot, req)
                 self.finished.append(req)
                 continue
             req.state = "decode"
@@ -354,10 +497,92 @@ class ServeEngine:
             self._topps[slot] = req.sampling.top_p
             self._dev_sampling = None  # re-upload on next decode step
 
+    # -- paged bookkeeping ----------------------------------------------------
+    def _ptab_row(self, rid: int) -> np.ndarray:
+        """One (max_pages,) page-table row for ``rid``'s held pages, in
+        token order, null-page-0 padded."""
+        row = np.zeros((self.max_pages,), np.int32)
+        held = self.pager.owned(rid)
+        row[:len(held)] = held
+        return row
+
+    def _release_slot(self, slot: int, req: Request) -> None:
+        """Free-on-finish: return the decode slot and (paged) every page
+        the request holds; its page-table row falls back to the null page
+        so the now-garbage decode row writes somewhere harmless."""
+        self.free_slots.append(slot)
+        if self.paged:
+            self.pager.release(req.rid)
+            self._ptab[slot] = 0
+            self._ptab_dirty = True
+
+    def _preempt(self, slot: int) -> None:
+        """Victim preemption: push an active request back to the queue head
+        and free its pages.  Recompute-style — on re-admission its prompt +
+        generated tokens re-prefill, so greedy outputs are unchanged."""
+        req = self.active.pop(slot)
+        self._release_slot(slot, req)
+        req.state = "queued"
+        req.slot = -1
+        self.queue.appendleft(req)
+        self.metrics.preemptions += 1
+
+    def _grow_pages(self) -> None:
+        """Allocate-on-append: every active slot needs a page covering the
+        position this step writes (its current length).  When the pool runs
+        dry, evict the youngest other active request and retry.  With no
+        victim left the request preempts *itself* (pages held by in-flight
+        prefill reservations free up once those prompts reach decode, so
+        retrying later preserves greedy token-identity); only a request
+        whose full context can never fit the pool is force-finished."""
+        for slot in sorted(self.active,
+                           key=lambda s: self.active[s].rid):
+            req = self.active.get(slot)
+            if req is None:
+                continue
+            need = int(self._lengths[slot]) + 1
+            while not self.pager.ensure(req.rid, need):
+                victims = [s for s, r in self.active.items()
+                           if r.rid != req.rid]
+                if not victims:
+                    if self.pager.pages_for(need) > self.pager.usable_pages:
+                        # grew past the whole pool: a capacity stop is the
+                        # only option (the dense analogue of max_seq exit)
+                        req.state = "done"
+                        req.finish_t = time.perf_counter()
+                        del self.active[slot]
+                        self._release_slot(slot, req)
+                        self.finished.append(req)
+                        self.metrics.capacity_stops += 1
+                    else:
+                        self._preempt(slot)
+                    break
+                self._preempt(max(victims,
+                                  key=lambda s: self.active[s].rid))
+            else:
+                # ensure() only ever appends pages, so a length change is
+                # the only way this slot's table row can differ
+                held = len(self.pager.owned(req.rid))
+                if held != int(np.count_nonzero(self._ptab[slot])):
+                    self._ptab[slot] = self._ptab_row(req.rid)
+                    self._ptab_dirty = True
+
+    def _sync_page_table(self) -> None:
+        if self._ptab_dirty:
+            self.cache = ModelCache(layers=self.cache.layers,
+                                    lengths=self.cache.lengths,
+                                    page_table=jnp.asarray(self._ptab))
+            self._ptab_dirty = False
+
     # -- decode ---------------------------------------------------------------
     def _decode_step(self) -> None:
         if not self.active:
             return
+        if self.paged:
+            self._grow_pages()
+            self._sync_page_table()
+            if not self.active:
+                return
         self.rng, step_key = jax.random.split(self.rng)
         if self._dev_sampling is None:
             self._dev_sampling = (jnp.asarray(self._temps),
@@ -384,7 +609,7 @@ class ServeEngine:
                 req.state = "done"
                 req.finish_t = now
                 del self.active[slot]
-                self.free_slots.append(slot)
+                self._release_slot(slot, req)
                 self.finished.append(req)
             else:
                 self._tokens[slot, 0] = tok
@@ -410,10 +635,61 @@ class ServeEngine:
             self._decode_step()
         self.metrics.end_t = time.perf_counter()
         self.metrics.occupancy_sum += len(self.active) / self.cfg.max_slots
+        m = self.metrics
+        m.peak_active = max(m.peak_active, len(self.active))
+        m.peak_inflight = max(m.peak_inflight,
+                              len(self.active) + len(self._prefills))
+        # kv utilization = live KV tokens / reserved capacity tokens, with
+        # the SAME numerator definition for both layouts so dense-vs-paged
+        # utilization ratios measure packing, not accounting differences
+        used = int(sum(self._lengths[s] for s in self.active))
+        if self.paged:
+            cap_tokens = self.pager.usable_pages * self.cfg.page_size
+            m.pages_in_use_peak = max(m.pages_in_use_peak,
+                                      self.pager.pages_in_use)
+        else:
+            cap_tokens = self.cfg.max_slots * self.cfg.max_seq
+        m.kv_util_sum += used / cap_tokens
+        m.kv_used_tokens_peak = max(m.kv_used_tokens_peak, used)
         if self.cfg.record_step_log:
             self.metrics.step_log.append(
                 (self.steps, len(self.active), len(self._prefills),
                  len(self.queue)))
+
+    def kv_stats(self) -> dict:
+        """Static + peak KV-capacity numbers for benchmarks: the decode
+        cache's device reservation in bytes and the peak bytes actually
+        holding live tokens (the dense layout's footprint *is* its
+        reservation — that gap is what paging recovers)."""
+        leaves = []
+        for leaf in self.cache.layers.values():
+            if isinstance(leaf, (PagedAttnCache,)) or hasattr(leaf, "k"):
+                for f in ("k", "v", "k_scale", "v_scale"):
+                    arr = getattr(leaf, f, None)
+                    if arr is not None:
+                        leaves.append(arr)
+        reserved = int(sum(x.size * x.dtype.itemsize for x in leaves))
+        out = {"cache_layout": self.cfg.cache_layout,
+               "kv_reserved_bytes": reserved}
+        if self.paged:
+            per_page = reserved / self.pager.n_pages
+            per_token = per_page / self.cfg.page_size
+            out.update(
+                page_size=self.cfg.page_size,
+                n_pages=self.pager.n_pages,
+                usable_pages=self.pager.usable_pages,
+                kv_peak_bytes=int(self.pager.peak_in_use * per_page),
+                kv_live_peak_bytes=int(self.metrics.kv_used_tokens_peak
+                                       * per_token),
+                pages_in_use=self.pager.pages_in_use)
+        else:
+            cap_tokens = self.cfg.max_slots * self.cfg.max_seq
+            per_token = reserved / cap_tokens
+            out.update(
+                kv_peak_bytes=reserved,  # dense footprint == reservation
+                kv_live_peak_bytes=int(self.metrics.kv_used_tokens_peak
+                                       * per_token))
+        return out
 
     def run(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):

@@ -1,0 +1,138 @@
+"""Paged KV-cache block allocator (the PagedAttention capacity lever).
+
+The paper's binding platform constraint for long-context / high-concurrency
+serving is **memory capacity** (PAPER §II-B, §V): a dense engine reserves
+``max_slots x max_seq`` KV tokens per layer, so short requests strand
+capacity and measured concurrency never reaches what the analytical side
+says the platform supports.  Paging fixes that: the device keeps one flat
+pool of fixed-size pages (``page_size`` tokens each) per attention layer,
+and each request owns just enough pages to cover the tokens it has actually
+produced — internal fragmentation is bounded by *one page per request*.
+
+This module is the host half: a pure-Python free-list allocator with
+per-owner page lists, mirroring the engine's scheduler style (pure Python,
+easy to fault-inject and test).  The device half is the
+``(n_pages, page_size, Hkv, Dh)`` pool + ``(B, max_pages)`` page-table
+indirection in :mod:`repro.models.attention`.
+
+Page id 0 is the **null page**: never allocated, it backs every unused
+page-table entry so freed/garbage decode slots write their junk somewhere
+harmless and gathers never index out of bounds.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` tokens (ceil division)."""
+    if n_tokens <= 0:
+        return 0
+    return -(-n_tokens // page_size)
+
+
+@dataclass
+class PageAllocator:
+    """Fixed-pool free-list allocator with per-owner accounting.
+
+    ``n_pages`` counts the whole device pool *including* the reserved null
+    page 0, so ``usable_pages == n_pages - 1``.  Owners are opaque ints
+    (the engine uses request ids); ``ensure`` is idempotent growth —
+    allocate-on-append maps to ``ensure(rid, n_tokens)`` once per token or
+    page boundary, and ``release`` is free-on-finish.
+    """
+
+    n_pages: int
+    page_size: int
+    _free: list[int] = field(default_factory=list)
+    _owned: dict[int, list[int]] = field(default_factory=dict)
+    peak_in_use: int = 0
+
+    def __post_init__(self):
+        if self.n_pages < 2:
+            raise ValueError("PageAllocator needs >= 2 pages (page 0 is the "
+                             "reserved null page)")
+        if self.page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        # LIFO free list: recently freed pages are reused first (cache-warm)
+        self._free = list(range(self.n_pages - 1, 0, -1))
+
+    # -- capacity ------------------------------------------------------------
+    @property
+    def usable_pages(self) -> int:
+        return self.n_pages - 1
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.usable_pages - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.pages_in_use / self.usable_pages if self.usable_pages \
+            else 0.0
+
+    def pages_for(self, n_tokens: int) -> int:
+        return pages_for(n_tokens, self.page_size)
+
+    def can_fit(self, n_tokens: int) -> bool:
+        """Would a fresh request of ``n_tokens`` tokens get its pages?"""
+        return self.pages_for(n_tokens) <= self.free_pages
+
+    # -- allocation ----------------------------------------------------------
+    def ensure(self, owner: int, n_tokens: int) -> bool:
+        """Grow ``owner``'s page list to cover ``n_tokens`` tokens.
+
+        All-or-nothing: on shortage nothing is allocated and False is
+        returned (the engine then preempts a victim and retries).  Already
+        holding enough pages is a no-op returning True.
+        """
+        held = self._owned.get(owner, [])
+        need = self.pages_for(n_tokens) - len(held)
+        if need <= 0:
+            return True
+        if need > len(self._free):
+            return False
+        if owner not in self._owned:
+            self._owned[owner] = held
+        for _ in range(need):
+            held.append(self._free.pop())
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        return True
+
+    def owned(self, owner: int) -> list[int]:
+        """Page ids held by ``owner``, in token order."""
+        return list(self._owned.get(owner, []))
+
+    def release(self, owner: int) -> int:
+        """Free every page ``owner`` holds; returns how many."""
+        pages = self._owned.pop(owner, [])
+        self._free.extend(pages)
+        return len(pages)
+
+    # -- introspection -------------------------------------------------------
+    def holders(self) -> list[int]:
+        return list(self._owned)
+
+    def check(self) -> None:
+        """Invariant audit (tests / fault injection): every usable page is
+        either free or owned by exactly one owner, and never page 0."""
+        seen: set[int] = set()
+        for owner, pages in self._owned.items():
+            for p in pages:
+                if p == 0:
+                    raise AssertionError(f"owner {owner} holds null page 0")
+                if p in seen:
+                    raise AssertionError(f"page {p} double-owned")
+                seen.add(p)
+        free = set(self._free)
+        if free & seen:
+            raise AssertionError(f"pages both free and owned: {free & seen}")
+        if 0 in free:
+            raise AssertionError("null page 0 on the free list")
+        if len(free) + len(seen) != self.usable_pages:
+            raise AssertionError("page leak: free + owned != usable")

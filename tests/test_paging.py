@@ -1,0 +1,313 @@
+"""Paged KV-cache subsystem: allocator invariants, dense-vs-paged greedy
+equivalence (the tentpole's token-identity acceptance), the capacity win
+under a fixed HBM budget, preemption correctness, and the analytical
+max-concurrency loop."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import build_model
+from repro.serving import EngineConfig, PageAllocator, Request, ServeEngine
+from repro.serving.paging import pages_for
+
+from conftest import tiny_dense_spec
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_basics():
+    a = PageAllocator(n_pages=9, page_size=8)  # 8 usable, page 0 reserved
+    assert a.usable_pages == 8 and a.free_pages == 8
+    assert a.pages_for(1) == 1 and a.pages_for(8) == 1 and a.pages_for(9) == 2
+    assert pages_for(0, 8) == 0
+    assert a.ensure(owner=1, n_tokens=17)  # 3 pages
+    assert a.pages_in_use == 3 and 0 not in a.owned(1)
+    assert a.ensure(1, 17)  # idempotent
+    assert a.pages_in_use == 3
+    assert a.ensure(2, 33)  # 5 pages -> pool now full
+    assert a.free_pages == 0
+    assert not a.ensure(3, 1)  # all-or-nothing failure
+    assert a.owned(3) == []
+    a.check()
+    assert a.release(1) == 3
+    assert a.free_pages == 3
+    assert a.ensure(3, 24)  # freed pages are reusable
+    a.check()
+
+
+def test_allocator_shortage_allocates_nothing():
+    a = PageAllocator(n_pages=5, page_size=4)
+    assert a.ensure(1, 8)  # 2 of 4 usable
+    assert not a.ensure(2, 13)  # needs 4 > 2 free
+    assert a.owned(2) == [] and a.free_pages == 2
+    a.check()
+
+
+def test_allocator_rejects_degenerate_pools():
+    with pytest.raises(ValueError):
+        PageAllocator(n_pages=1, page_size=8)
+    with pytest.raises(ValueError):
+        PageAllocator(n_pages=8, page_size=0)
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence + capacity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    spec = tiny_dense_spec()
+    model = build_model(spec, mesh=None, param_dtype=jnp.float32,
+                        compute_dtype=jnp.float32)
+    params = model.init(jax.random.key(7))
+    return spec, model, params
+
+
+def _serve(model, params, cfg, prompts, max_new=6):
+    eng = ServeEngine(model, params, cfg)
+    reqs = eng.serve([Request(prompt=list(p), max_new_tokens=max_new)
+                      for p in prompts])
+    assert all(r.state == "done" for r in reqs)
+    return eng, [r.output for r in reqs]
+
+
+def test_paged_equals_dense_mixed_prompt_lengths(served):
+    """Acceptance: token-identical greedy outputs, dense vs paged, on a
+    mixed prompt-length workload that exercises partial pages, page-
+    boundary growth and slot churn."""
+    spec, model, params = served
+    rng = np.random.default_rng(3)
+    lengths = [3, 11, 4, 17, 9, 5, 23, 8]
+    prompts = [[int(t) for t in rng.integers(0, spec.vocab, size=n)]
+               for n in lengths]
+    _, dense = _serve(model, params,
+                      EngineConfig(max_slots=4, max_seq=64, chunk_size=4,
+                                   prefill_rows=3), prompts)
+    peng, paged = _serve(model, params,
+                         EngineConfig(max_slots=4, max_seq=64, chunk_size=4,
+                                      prefill_rows=3, cache_layout="paged",
+                                      page_size=8), prompts)
+    assert dense == paged
+    peng.pager.check()
+    assert peng.metrics.pages_in_use_peak > 0
+    assert 0 < peng.metrics.mean_kv_utilization <= 1
+
+
+def test_paged_equals_dense_quantized(served):
+    """The int8 k_scale/v_scale path pages alongside the values."""
+    spec, _, _ = served
+    model = build_model(spec, mesh=None, param_dtype=jnp.float32,
+                        compute_dtype=jnp.float32, kv_quant=True)
+    params = model.init(jax.random.key(7))
+    prompts = [[5, 9, 2, 17, 33, 4, 8, 1], [7, 7, 7], [100, 3, 50, 2, 1]]
+    _, dense = _serve(model, params,
+                      EngineConfig(max_slots=3, max_seq=32, chunk_size=4),
+                      prompts)
+    _, paged = _serve(model, params,
+                      EngineConfig(max_slots=3, max_seq=32, chunk_size=4,
+                                   cache_layout="paged", page_size=8),
+                      prompts)
+    assert dense == paged
+
+
+def test_paged_admits_strictly_more_under_same_budget(served):
+    """Acceptance: under the same HBM token budget (4 slots x 64 tokens)
+    the paged engine keeps strictly more requests decoding concurrently
+    than the dense engine, because short requests stop stranding their
+    max_seq reservation."""
+    spec, model, params = served
+    rng = np.random.default_rng(0)
+    prompts = [[int(t) for t in rng.integers(0, spec.vocab, size=6)]
+               for _ in range(16)]
+    deng, dense = _serve(model, params,
+                         EngineConfig(max_slots=4, max_seq=64, chunk_size=8,
+                                      prefill_rows=4), prompts, max_new=4)
+    peng, paged = _serve(model, params,
+                         EngineConfig(max_slots=16, max_seq=64, chunk_size=8,
+                                      prefill_rows=4, cache_layout="paged",
+                                      page_size=8, n_pages=33),
+                         prompts, max_new=4)
+    assert dense == paged
+    assert peng.metrics.peak_active > deng.metrics.peak_active
+    # same budget: 32 usable pages x 8 tokens == 4 x 64 dense tokens
+    assert (peng.pager.usable_pages * 8
+            == deng.cfg.max_slots * deng.cfg.max_seq)
+
+
+def test_preemption_keeps_greedy_outputs(served):
+    """When the pool runs dry mid-decode the youngest active request is
+    preempted and recomputed; greedy outputs must not change."""
+    spec, model, params = served
+    prompts = [[1 + i, 2, 3, 4, 5, 6, 7] for i in range(4)]
+    cfg = EngineConfig(max_slots=6, max_seq=64, chunk_size=8,
+                       prefill_rows=2, cache_layout="paged", page_size=8,
+                       n_pages=9)  # 8 usable pages: too few for 4 requests
+    peng, paged = _serve(model, params, cfg, prompts, max_new=20)
+    assert peng.metrics.preemptions > 0
+    peng.pager.check()
+    _, dense = _serve(model, params,
+                      EngineConfig(max_slots=6, max_seq=64, chunk_size=8,
+                                   prefill_rows=2), prompts, max_new=20)
+    assert paged == dense
+
+
+def test_self_preemption_when_prefill_holds_the_pool(served):
+    """A lone active request that cannot grow while an in-flight prefill's
+    reservation holds the remaining pages must requeue itself (recompute)
+    rather than truncate — outputs stay dense-identical, no capacity
+    stop."""
+    spec, model, params = served
+    # 6 usable pages of 8 tokens.  A (8-token prompt; inserts positions
+    # 8..16 while generating 10 tokens = 3 pages) decodes and grows page
+    # by page while B's 30-token prompt crawls through a 2-token chunked
+    # prefill holding a 4-page reservation: when A needs its third page
+    # the pool is dry and the only other holder is not yet active.  Both
+    # requests individually fit the pool, so no capacity stop is
+    # legitimate.
+    prompts = [[9, 8, 7, 6, 5, 4, 3, 2], list(range(1, 31))]
+    cfg = EngineConfig(max_slots=2, max_seq=64, chunk_size=2,
+                       prefill_rows=1, cache_layout="paged", page_size=8,
+                       n_pages=7)
+    peng, paged = _serve(model, params, cfg, prompts, max_new=10)
+    assert peng.metrics.capacity_stops == 0
+    assert peng.metrics.preemptions > 0
+    _, dense = _serve(model, params,
+                      EngineConfig(max_slots=2, max_seq=64, chunk_size=2,
+                                   prefill_rows=1), prompts, max_new=10)
+    assert paged == dense
+
+
+def test_paged_rejects_oversized_prompt(served):
+    spec, model, params = served
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_slots=2, max_seq=32, chunk_size=8,
+                                   cache_layout="paged", page_size=8,
+                                   n_pages=3))  # 2 usable pages = 16 tokens
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(Request(prompt=list(range(1, 20)), max_new_tokens=2))
+    # the per-slot page-table width binds even when the pool is plentiful:
+    # max_seq=32 -> 4-entry rows; a 40-token prompt must be rejected, not
+    # crash the insert after prefill
+    eng2 = ServeEngine(model, params,
+                       EngineConfig(max_slots=4, max_seq=32, chunk_size=8,
+                                    cache_layout="paged", page_size=8,
+                                    n_pages=17))  # 16 usable pages
+    with pytest.raises(ValueError, match="max_pages"):
+        eng2.submit(Request(prompt=list(range(1, 41)), max_new_tokens=2))
+
+
+def test_paged_config_validation(served):
+    spec, model, params = served
+    with pytest.raises(ValueError, match="multiple"):
+        ServeEngine(model, params,
+                    EngineConfig(max_seq=30, cache_layout="paged",
+                                 page_size=8))
+    with pytest.raises(ValueError, match="cache_layout"):
+        ServeEngine(model, params, EngineConfig(cache_layout="ragged"))
+
+
+# ---------------------------------------------------------------------------
+# analytical loop
+# ---------------------------------------------------------------------------
+
+def test_memory_check_paged_rounds_up_to_pages():
+    from repro.core import Optimizations, ParallelismConfig, Workload
+    from repro.core.stages import memory_check
+    from repro.scenario import resolve_model, resolve_platform
+
+    spec = resolve_model("llama3-8b")
+    plat = resolve_platform("hgx-h100x8")
+    wl = Workload(batch=8, tau_p=1000, tau_d=1, name="frag")
+    par = ParallelismConfig()
+    dense = memory_check(spec, plat, par, Optimizations(), wl)
+    paged = memory_check(spec, plat, par,
+                         Optimizations(paged_kv=True, kv_page_size=128), wl)
+    # 1001 tokens -> 8 pages of 128 = 1024 tokens: paged >= dense, and the
+    # gap is bounded by one page per request
+    assert paged.kv_per_npu >= dense.kv_per_npu
+    per_tok = dense.kv_per_npu / (wl.batch * 1001)
+    assert paged.kv_per_npu - dense.kv_per_npu <= \
+        wl.batch * 128 * per_tok + 1e-6
+
+
+def test_max_concurrency_paged_beats_dense_reservation():
+    from repro.core import Optimizations, ParallelismConfig, Workload
+    from repro.core.stages import max_concurrency
+    from repro.scenario import resolve_model, resolve_platform
+
+    spec = resolve_model("llama3-8b")
+    plat = resolve_platform("hgx-h100x8")
+    wl = Workload(batch=1, tau_p=1024, tau_d=256, name="cap")
+    par = ParallelismConfig(tp=8)
+    dense = max_concurrency(spec, plat, par, Optimizations(), wl,
+                            reserved_ctx=8192)  # dense engine's max_seq
+    paged = max_concurrency(
+        spec, plat, par, Optimizations(paged_kv=True, kv_page_size=64), wl)
+    assert paged > dense > 0
+
+
+def test_max_concurrency_req_budget_form_agrees():
+    """The §VI budget-form helper matches the platform-form inversion when
+    the whole platform is one unsharded pool (tp=ep=pp=1)."""
+    from repro.core import Optimizations, ParallelismConfig, Workload
+    from repro.core.requirements import max_concurrency_req
+    from repro.core.stages import max_concurrency, _platform_capacity
+    from repro.scenario import resolve_model, resolve_platform
+
+    spec = resolve_model("llama3-8b")
+    plat = resolve_platform("gb200x8")
+    wl = Workload(batch=1, tau_p=2048, tau_d=512, name="cap")
+    for opt in (Optimizations(),
+                Optimizations(paged_kv=True, kv_page_size=128)):
+        via_platform = max_concurrency(spec, plat, ParallelismConfig(),
+                                       opt, wl)
+        via_budget = max_concurrency_req(spec, wl, opt,
+                                         _platform_capacity(plat))
+        assert via_budget == via_platform > 0
+
+
+def test_compare_reports_max_concurrency_error(served):
+    """compare() ties the analytical §VI-A capacity prediction to the
+    measured engine concurrency through the unified Report schema."""
+    from repro.core.stages import Workload
+    from repro.scenario import Scenario, compare, run, resolve_platform
+
+    spec = tiny_dense_spec(name="cmp-tiny")
+    wl = Workload(batch=16, tau_p=28, tau_d=4, name="cap")
+    base = resolve_platform("hgx-h100x8")
+    w_bytes = spec.param_count() * 2.0  # bf16 weights
+    kv_budget = 5 * 32 * spec.kv_bytes_per_token("bf16")  # room for 5 reqs
+    plat = dataclasses.replace(
+        base, name="toy-cap",
+        npu=dataclasses.replace(base.npu, mem=dataclasses.replace(
+            base.npu.mem, capacity=w_bytes + kv_budget)))
+    sc = Scenario.make(spec, workload=wl, platform=plat,
+                       opt=dict(paged_kv=True, kv_page_size=8))
+    pred, = run([sc], backend="analytical")
+    assert pred.max_concurrency == 5
+    meas, = run([sc], backend="engine",
+                engine_kw=dict(max_slots=12, max_seq=64, max_prompt=28,
+                               max_new=4, n_requests=16,
+                               kv_budget_bytes=kv_budget))
+    assert meas.status == "ok"
+    assert meas.extra["kv"]["cache_layout"] == "paged"
+    err = compare(pred, meas)
+    assert "max_concurrency" in err and err["max_concurrency"] <= 0.25
+
+
+def test_scenario_paged_opt_roundtrip_and_sweepable():
+    from repro.core.stages import Workload
+    from repro.scenario import Scenario, Sweep
+
+    sc = Scenario.make(tiny_dense_spec(name="rt"),
+                       workload=Workload(batch=2, tau_p=8, tau_d=4),
+                       opt=dict(paged_kv=True, kv_page_size=32))
+    assert Scenario.from_json(sc.to_json()) == sc
+    grid = Sweep(sc).over(paged_kv=[False, True]).scenarios()
+    assert [g.opt.paged_kv for g in grid] == [False, True]

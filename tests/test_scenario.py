@@ -130,6 +130,28 @@ def test_sweep_rejects_unknown_axis():
         Sweep(_base()).over(warp_factor=[9])
 
 
+def test_sweep_where_predicate_prunes():
+    """Capacity-style grids can cut points (e.g. prompts beyond the
+    sequence budget) instead of reporting them as OOM results."""
+    max_seq = 8192
+    grid = (Sweep(_base()).over(tau_p=[1024, 4096, 16384, 65536])
+            .where(lambda sc: sc.workload.tau_p <= max_seq))
+    kept, dropped = grid.partition()
+    assert [s.workload.tau_p for s in kept] == [1024, 4096]
+    assert [s.workload.tau_p for s in dropped] == [16384, 65536]
+    # predicates AND together and compose with feasibility pruning
+    both = (Sweep(_base()).over(tau_p=[1024, 4096], tp=[1, 16])
+            .where(lambda sc: sc.workload.tau_p <= max_seq)
+            .where(lambda sc: sc.workload.tau_p >= 2048))
+    assert [(s.workload.tau_p, s.parallelism.tp)
+            for s in both.scenarios()] == [(4096, 1)]
+
+
+def test_sweep_where_rejects_non_callable():
+    with pytest.raises(TypeError, match="callable"):
+        Sweep(_base()).where(42)
+
+
 def test_sweep_whole_object_axes():
     """workload=/opt=/parallelism= axes sweep the whole sub-object (and
     compose with field shortcuts refining them)."""
@@ -210,12 +232,31 @@ def test_parallel_equals_serial():
 
 def test_deprecated_genz_shim_still_works():
     from repro.core import GenZ
+    from repro.core import genz as genz_mod
     g = GenZ.hgx_h100(8).with_opt(**FP8)
+    genz_mod.reset_deprecation_warnings()
     with pytest.warns(DeprecationWarning):
         old = g.estimate("llama3-8b", use_case="chat", batch=4,
                          parallelism=dict(tp=8))
     rep, = run([_base()])
     assert old.ttft == rep.ttft_s and old.tpot == rep.tpot_s
+
+
+def test_deprecated_genz_warning_is_one_shot(recwarn):
+    """The shim nags once per method per process, not per call."""
+    import warnings as _w
+    from repro.core import GenZ
+    from repro.core import genz as genz_mod
+    g = GenZ.hgx_h100(8).with_opt(**FP8)
+    genz_mod.reset_deprecation_warnings()
+    with _w.catch_warnings(record=True) as caught:
+        _w.simplefilter("always")
+        for _ in range(3):
+            g.estimate("llama3-8b", use_case="chat", batch=4,
+                       parallelism=dict(tp=8))
+    deps = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1
+    assert "Scenario" in str(deps[0].message)
 
 
 # ---------------------------------------------------------------------------

@@ -8,8 +8,11 @@ trajectory (tokens/s, TTFT, TPOT, slot occupancy per cell).
     PYTHONPATH=src python benchmarks/serving_bench.py --out r.json
     PYTHONPATH=src python benchmarks/serving_bench.py --scenario sc.json
     PYTHONPATH=src python benchmarks/serving_bench.py --paged    # paged KV
+    PYTHONPATH=src python benchmarks/serving_bench.py --unified  # packed step
     PYTHONPATH=src python benchmarks/serving_bench.py --compare-paged \
         --out artifacts/benchmarks/paged_kv.json   # dense-vs-paged capacity
+    PYTHONPATH=src python benchmarks/serving_bench.py --compare-unified \
+        --out artifacts/benchmarks/unified_step.json  # one-dispatch win
 
 Every cell reports peak KV bytes and cache utilization alongside
 throughput/latency (``kv_reserved_bytes`` / ``kv_peak_bytes`` /
@@ -17,6 +20,13 @@ throughput/latency (``kv_reserved_bytes`` / ``kv_peak_bytes`` /
 ``--compare-paged`` runs the same workload through a dense engine and a
 paged engine holding the *same HBM token budget* and records the
 concurrency / utilization win (the paper's §V memory-capacity lever).
+``--compare-unified`` runs the same rate x prompt-mix sweep through a
+two-dispatch paged engine and the unified token-packed engine (one jitted
+dispatch + one device->host transfer per step), asserts greedy outputs
+stay token-identical, and records tokens/s, TTFT, TPOT and
+dispatches/step per cell plus the predicted-vs-measured chunked-TPOT
+error from ``repro.scenario.compare`` (the paper's validation loop for
+the chunking optimization).
 
 The engine under test is constructed by *lowering a Scenario*
 (``repro.scenario``): either one loaded from ``--scenario`` (a
@@ -81,7 +91,7 @@ def page_size(args, sc) -> int:
     return sc.opt.kv_page_size if sc.opt.paged_kv else 16
 
 
-def build_engine(sc, args, layout=None):
+def build_engine(sc, args, layout=None, unified=None):
     """Lower the Scenario to a live engine (shared with the scenario
     engine backend, so bench and backend measure the same thing)."""
     from repro.scenario.engine_backend import lower_model
@@ -94,7 +104,8 @@ def build_engine(sc, args, layout=None):
     spec, model, params = lower_model(sc.model)
     chunk = (sc.chunked.chunk if sc.mode == "chunked" and sc.chunked
              else args.chunk)
-    layout = layout or ("paged" if (args.paged or sc.opt.paged_kv)
+    unified = args.unified if unified is None else unified
+    layout = layout or ("paged" if (args.paged or sc.opt.paged_kv or unified)
                         else "dense")
     paging = {}
     if layout == "paged":
@@ -102,7 +113,8 @@ def build_engine(sc, args, layout=None):
                       n_pages=args.n_pages)
     cfg = EngineConfig(max_slots=args.slots, max_seq=args.max_seq,
                        chunk_size=min(chunk, args.max_seq),
-                       prefill_rows=args.prefill_rows, **paging)
+                       prefill_rows=args.prefill_rows, unified=unified,
+                       **paging)
     return spec, ServeEngine(model, params, cfg, rng=jax.random.key(1))
 
 
@@ -140,7 +152,7 @@ def run_cell(eng: ServeEngine, vocab: int, rate: float, mix: str,
             "prompt_tokens": sum(len(p) for p in prompts)}
     cell.update(eng.metrics.summary(reqs))
     cell.update(eng.kv_stats())  # peak KV bytes + reservation per layout
-    return cell
+    return cell, reqs
 
 
 def compare_paged(sc, args) -> dict:
@@ -199,6 +211,81 @@ def compare_paged(sc, args) -> dict:
     return out
 
 
+def compare_unified(sc, args) -> dict:
+    """Two-dispatch paged engine vs the unified token-packed step on the
+    same mixed rate x prompt sweep: identical requests through both,
+    greedy outputs asserted token-identical, and the win reported as
+    aggregate tokens/s plus per-cell TTFT/TPOT/dispatches-per-step.  The
+    analytical chunked-TPOT prediction (one fused pass per iteration,
+    ``core.stages.chunked``) is compared against the measured unified
+    TPOT through ``repro.scenario.compare`` — the paper's
+    predicted-vs-measured loop, now against a real fused implementation.
+    """
+    out = {"max_slots": args.slots, "max_seq": args.max_seq,
+           "chunk_size": args.chunk, "prefill_rows": args.prefill_rows,
+           "page_size": page_size(args, sc), "n_requests": args.requests,
+           "rates": args.rates, "mixes": args.mixes}
+    outputs: dict[str, list] = {}
+    for mode in ("two_dispatch", "unified"):
+        spec, eng = build_engine(sc, args, layout="paged",
+                                 unified=(mode == "unified"))
+        # warm the jitted programs so cell 0 isn't all compile time
+        eng.serve([Request(prompt=[1, 2, 3, 4, 5], max_new_tokens=2)])
+        cells, outs = [], []
+        for mix in args.mixes:
+            for rate in args.rates:
+                cell, reqs = run_cell(eng, spec.vocab, rate, mix,
+                                      args.requests, args.max_new,
+                                      args.seed)
+                cells.append(cell)
+                outs.append([list(r.output) for r in reqs])
+        gen = sum(c["generated_tokens"] for c in cells)
+        wall = sum(c["cell_wall_s"] for c in cells)
+        outputs[mode] = outs
+        out[mode] = {
+            "cells": cells,
+            "generated_tokens": gen,
+            "sweep_wall_s": wall,
+            "tokens_per_s": gen / wall if wall > 0 else 0.0,
+            "ttft_s_mean": float(np.mean([c["ttft_s_mean"] for c in cells])),
+            "tpot_s_mean": float(np.mean([c["tpot_s_mean"] for c in cells])),
+            "dispatches_per_step": (sum(c["dispatches"] for c in cells)
+                                    / max(sum(c["steps"] for c in cells), 1)),
+            "transfers_per_step": (sum(c["transfers_d2h"] for c in cells)
+                                   / max(sum(c["steps"] for c in cells), 1)),
+            "outputs_sha1": hashlib.sha1(
+                repr(outs).encode()).hexdigest(),
+        }
+    # greedy token-identity between the two implementations, per request
+    assert outputs["two_dispatch"] == outputs["unified"], \
+        "unified and two-dispatch engines diverged on the same workload"
+    out["tokens_per_s_win"] = (out["unified"]["tokens_per_s"]
+                               / max(out["two_dispatch"]["tokens_per_s"],
+                                     1e-12))
+    out["dispatch_collapse"] = (out["two_dispatch"]["dispatches_per_step"]
+                                / max(out["unified"]["dispatches_per_step"],
+                                      1e-12))
+
+    # predicted-vs-measured chunked TPOT through the Scenario backends
+    from repro.scenario import compare, run as run_scenarios
+    pred = run_scenarios([sc], backend="analytical")[0]
+    meas = run_scenarios(
+        [sc], backend="engine",
+        engine_kw=dict(unified=True, max_slots=args.slots,
+                       max_seq=args.max_seq,
+                       prefill_rows=args.prefill_rows,
+                       page_size=page_size(args, sc),
+                       n_requests=args.requests))[0]
+    out["chunked_tpot"] = {
+        "predicted_fused_s": pred.tpot_s,
+        "predicted_two_dispatch_s":
+            (pred.extra.get("chunked_two_dispatch") or {}).get("tpot"),
+        "measured_unified_s": meas.tpot_s,
+        "compare": compare(pred, meas),
+    }
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None,
@@ -224,9 +311,17 @@ def main() -> None:
                          "kv_page_size, else 16)")
     ap.add_argument("--n-pages", type=int, default=None,
                     help="page-pool size (default: dense-equivalent)")
+    ap.add_argument("--unified", action="store_true",
+                    help="serve with the unified token-packed step (one "
+                         "jitted dispatch per engine step; implies paged)")
     ap.add_argument("--compare-paged", action="store_true",
                     help="dense-vs-paged capacity comparison under the "
                          "same HBM token budget (skips the rate sweep)")
+    ap.add_argument("--compare-unified", action="store_true",
+                    help="two-dispatch vs unified-step comparison on the "
+                         "rate x mix sweep (token-identity asserted; "
+                         "records the tokens/s win and the "
+                         "predicted-vs-measured chunked TPOT error)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweep for CI: one rate, two mixes")
     ap.add_argument("--out", default=None, help="write JSON here too")
@@ -240,11 +335,13 @@ def main() -> None:
 
     def scenario_for_run():
         """Keep the recorded scenario consistent with the engine: --paged
+        (and --unified / --compare-unified, which imply the paged layout)
         promotes the scenario's opt so the JSON never claims a dense
         scenario next to a paged engine run."""
         import dataclasses
         sc = build_scenario(args)
-        if args.paged and not sc.opt.paged_kv:
+        paged = args.paged or args.unified or args.compare_unified
+        if paged and not sc.opt.paged_kv:
             sc = sc.replace(opt=dataclasses.replace(
                 sc.opt, paged_kv=True, kv_page_size=page_size(args, sc)))
         return sc
@@ -261,6 +358,24 @@ def main() -> None:
             print(f"wrote {args.out}", file=sys.stderr)
         return
 
+    if args.compare_unified:
+        sc = scenario_for_run()
+        res = compare_unified(sc, args)
+        report = {"bench": "serving_bench/compare_unified",
+                  "scenario": sc.to_dict(), "smoke": args.smoke,
+                  "result": res}
+        text = json.dumps(report, indent=2)
+        print(text)
+        print(f"unified vs two-dispatch: "
+              f"{res['tokens_per_s_win']:.2f}x tokens/s, "
+              f"{res['two_dispatch']['dispatches_per_step']:.2f} -> "
+              f"{res['unified']['dispatches_per_step']:.2f} dispatches/step",
+              file=sys.stderr)
+        if args.out:
+            Path(args.out).write_text(text)
+            print(f"wrote {args.out}", file=sys.stderr)
+        return
+
     sc = scenario_for_run()
     spec, eng = build_engine(sc, args)
     # warm the jitted programs so cell 0 isn't all compile time
@@ -269,8 +384,8 @@ def main() -> None:
     cells = []
     for mix in args.mixes:
         for rate in args.rates:
-            cell = run_cell(eng, spec.vocab, rate, mix, args.requests,
-                            args.max_new, args.seed)
+            cell, _ = run_cell(eng, spec.vocab, rate, mix, args.requests,
+                               args.max_new, args.seed)
             cells.append(cell)
             print(f"  {mix:>6} @ {rate:6.1f} req/s: "
                   f"{cell['tokens_per_s']:8.1f} tok/s | "
@@ -289,6 +404,7 @@ def main() -> None:
                    "prefill_rows": eng.cfg.prefill_rows,
                    "max_seq": eng.cfg.max_seq,
                    "cache_layout": eng.cfg.cache_layout,
+                   "unified": eng.cfg.unified,
                    "page_size": eng.cfg.page_size,
                    "n_pages": eng.pager.n_pages if eng.paged else None},
         "smoke": args.smoke,

@@ -44,4 +44,41 @@ echo "== paged KV: paged-vs-dense greedy equivalence smoke =="
 python benchmarks/serving_bench.py --compare-paged --smoke > /dev/null
 # (compare_paged asserts token-identical outputs before reporting the win)
 
+echo "== unified step: ragged kernel in Pallas interpret mode =="
+python -m pytest tests/test_kernels.py -q -k "ragged"
+
+echo "== unified step: exactly one jitted dispatch + one transfer per step =="
+python - <<'EOF'
+import jax
+import jax.numpy as jnp
+
+from repro.core.modelspec import AttnSpec, ModelSpec
+from repro.models import build_model
+from repro.serving import EngineConfig, Request, ServeEngine
+
+spec = ModelSpec(name="ci-tiny", d_model=64, n_layers=2, n_heads=4,
+                 n_kv_heads=2, d_head=16, d_ff=128, vocab=256,
+                 attn=AttnSpec(kind="full", causal=True))
+model = build_model(spec, mesh=None, param_dtype=jnp.float32,
+                    compute_dtype=jnp.float32)
+params = model.init(jax.random.key(0))
+eng = ServeEngine(model, params,
+                  EngineConfig(max_slots=4, max_seq=64, chunk_size=4,
+                               prefill_rows=2, cache_layout="paged",
+                               page_size=8, unified=True))
+reqs = [Request(prompt=list(range(1, 10 + i)), max_new_tokens=4)
+        for i in range(5)]
+eng.serve(reqs)
+assert all(r.state == "done" for r in reqs)
+m = eng.metrics
+assert m.dispatches == m.steps > 0, (m.dispatches, m.steps)
+assert m.transfers_d2h == m.steps, (m.transfers_d2h, m.steps)
+print(f"unified: {m.steps} steps = {m.dispatches} dispatches = "
+      f"{m.transfers_d2h} transfers OK")
+EOF
+
+echo "== unified step: two-dispatch-vs-unified equivalence smoke =="
+python benchmarks/serving_bench.py --compare-unified --smoke > /dev/null
+# (compare_unified asserts token-identical outputs before reporting the win)
+
 echo "CI OK"

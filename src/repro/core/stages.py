@@ -208,25 +208,53 @@ def decode(spec: ModelSpec, platform: Platform, par: ParallelismConfig,
 
 def chunked(spec: ModelSpec, platform: Platform, par: ParallelismConfig,
             opt: Optimizations, wl: Workload, chunk: int,
-            decode_batch: int, decode_ctx: int | None = None) -> StageResult:
+            decode_batch: int, decode_ctx: int | None = None, *,
+            fused: bool = True) -> StageResult:
     """One chunked-prefill iteration (paper §IV-A / SplitFuse / Sarathi).
 
     The forward pass carries ``chunk`` tokens: ``decode_batch`` of them are
     decode tokens (one per in-flight request, each attending to its own KV
     cache) and the rest are a slice of an outstanding prefill.  Linear layers
     see a fixed ``chunk``-token batch; only logit/attend grow with context.
+
+    ``fused`` selects which engine implementation is being priced:
+
+      * True  — the unified token-packed step: decode tokens and the
+        prefill slice ride ONE dispatch, so the linear layers stream the
+        weights once for the whole chunk (``ServeEngine(unified=True)``).
+      * False — the two-dispatch baseline: a decode pass plus a separate
+        prefill-chunk pass, each streaming the weights (and paying a
+        dispatch) on its own — the gap chunking exists to close.
+
+    Attention work is identical under both (each token attends to its own
+    request's KV either way); only the linear-layer accounting differs.
     """
     ctx = decode_ctx if decode_ctx is not None else wl.tau_p + wl.tau_d // 2
     prefill_tokens = max(chunk - decode_batch, 0)
 
-    # Linear/MoE/embed ops for the full fused chunk: profiled with attention
-    # stripped out (kv_len=0 contributes no logit/attend flops).
-    fused = PassSpec(batch=1, q_len=chunk, kv_len=0, causal_square=False)
-    ops = model_ops(spec, fused, par, opt)
-    ops = [o for o in ops if not o.name.startswith(("attn.flash", "attn.logit",
-                                                    "attn.softmax",
-                                                    "attn.attend",
-                                                    "attn.kv_append"))]
+    attn_prefixes = ("attn.flash", "attn.logit", "attn.softmax",
+                     "attn.attend", "attn.kv_append")
+    if fused:
+        # Linear/MoE/embed ops for the full fused chunk: profiled with
+        # attention stripped out (kv_len=0 adds no logit/attend flops).
+        fused_pass = PassSpec(batch=1, q_len=chunk, kv_len=0,
+                              causal_square=False)
+        ops = [o for o in model_ops(spec, fused_pass, par, opt)
+               if not o.name.startswith(attn_prefixes)]
+    else:
+        # Two dispatches: the decode batch and the prefill slice each run
+        # their linear layers (weights stream twice per iteration).
+        ops = []
+        if decode_batch > 0:
+            dec_lin = PassSpec(batch=decode_batch, q_len=1, kv_len=0,
+                               causal_square=False)
+            ops += [o for o in model_ops(spec, dec_lin, par, opt)
+                    if not o.name.startswith(attn_prefixes)]
+        if prefill_tokens > 0:
+            pre_lin = PassSpec(batch=1, q_len=prefill_tokens, kv_len=0,
+                               causal_square=False)
+            ops += [o for o in model_ops(spec, pre_lin, par, opt)
+                    if not o.name.startswith(attn_prefixes)]
     # Attention for the decode tokens: decode_batch requests, 1 query each.
     if decode_batch > 0:
         dec = PassSpec(batch=decode_batch, q_len=1, kv_len=ctx,
@@ -255,8 +283,10 @@ def chunked(spec: ModelSpec, platform: Platform, par: ParallelismConfig,
     t = pt.total
     thr = decode_batch / t if t > 0 else 0.0
     return StageResult("chunked", pt, t, pass_energy(pt, platform, opt), mem,
-                       meta={"iter_time": t, "decode_tokens_per_s": thr,
-                             "chunk": chunk, "decode_batch": decode_batch})
+                       meta={"iter_time": t, "tpot": t,
+                             "decode_tokens_per_s": thr, "chunk": chunk,
+                             "decode_batch": decode_batch, "fused": fused,
+                             "dispatches_per_iter": 1 if fused else 2})
 
 
 def expected_tokens_per_cycle(n: int, gamma: float) -> float:

@@ -13,12 +13,14 @@ Two variants share that structure:
 
   * :func:`pallas_decode_attention` — dense (B, T, Hkv, D) cache, the
     kv-block index is the grid index itself.
-  * :func:`pallas_paged_decode_attention` — paged (n_pages, page_size,
-    Hkv, D) pool: the per-slot page table rides in as a scalar-prefetch
-    operand and the K/V BlockSpec index maps walk it, so each grid step
-    DMAs exactly the page the slot owns (gathered K/V tiles into VMEM,
-    same online-softmax combine; HBM traffic stays K + V exactly — no
-    materialized per-request linearization).
+  * :func:`pallas_paged_decode_attention` — paged (n_pages, Hkv,
+    page_size, D) pool (the resident layout: head axis ahead of the
+    page-token axis, so one (page, head) tile is a contiguous block and
+    no per-call transpose is needed): the per-slot page table rides in as
+    a scalar-prefetch operand and the K/V BlockSpec index maps walk it,
+    so each grid step DMAs exactly the page the slot owns (gathered K/V
+    tiles into VMEM, same online-softmax combine; HBM traffic stays
+    K + V exactly — no materialized per-request linearization).
 
 On real deployments the KV sequence may be sharded across chips (the
 ``inference_seqkv`` policy); each chip then runs this kernel over its local
@@ -188,9 +190,11 @@ def _paged_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 def pallas_paged_decode_attention(q, k_pool, v_pool, page_table, lengths, *,
                                   sm_scale: float | None = None,
                                   interpret: bool = False) -> jax.Array:
-    """q: (B, 1, Hq, D); k_pool, v_pool: (P, page_size, Hkv, D);
-    page_table: (B, max_pages) int32 page ids (0 = reserved null page);
-    lengths: (B,) valid KV tokens per slot.
+    """q: (B, 1, Hq, D); k_pool, v_pool: (P, Hkv, page_size, D) — the
+    resident layout (head axis before the page-token axis), so the pools
+    feed the kernel directly with no per-call transpose; page_table:
+    (B, max_pages) int32 page ids (0 = reserved null page); lengths: (B,)
+    valid KV tokens per slot.
 
     Returns (B, 1, Hq, D).  Equivalent to gathering each slot's pages into
     a (B, max_pages * page_size, Hkv, D) view and running masked decode
@@ -202,16 +206,13 @@ def pallas_paged_decode_attention(q, k_pool, v_pool, page_table, lengths, *,
 
     b, sq, hq, d = q.shape
     assert sq == 1, "decode kernel processes one token per request"
-    n_pool, ps, hkv, _ = k_pool.shape
+    n_pool, hkv, ps, _ = k_pool.shape
     _, max_pages = page_table.shape
     g = hq // hkv
     scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
 
     qr = q[:, 0].reshape(b, hkv, g, d).reshape(b * hkv, g, d)
-    # (P, ps, Hkv, D) -> (P, Hkv, ps, D): the head axis must sit before the
-    # page-token axis so one (page, head) tile is a contiguous block
-    kr = jnp.moveaxis(k_pool, 2, 1)
-    vr = jnp.moveaxis(v_pool, 2, 1)
+    kr, vr = k_pool, v_pool
 
     kernel = functools.partial(_paged_decode_kernel, sm_scale=scale,
                                page_size=ps, n_pages=max_pages, hkv=hkv)

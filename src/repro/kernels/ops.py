@@ -49,9 +49,11 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, lengths, *,
                            impl: str = "gather", interpret: bool = False):
     """Single-token decode attention against a paged KV pool.
 
-    q: (B, 1, Hq, D); k_pool, v_pool: (P, page_size, Hkv, D); page_table:
-    (B, max_pages) int32 (page 0 = reserved null page); lengths: (B,)
-    valid KV tokens (including the token just inserted).
+    q: (B, 1, Hq, D); k_pool, v_pool: (P, Hkv, page_size, D) — the
+    resident layout, head axis ahead of the page-token axis so one
+    (page, head) tile is a contiguous block; page_table: (B, max_pages)
+    int32 (page 0 = reserved null page); lengths: (B,) valid KV tokens
+    (including the token just inserted).
 
       gather : materialize the per-slot linear view, masked softmax (the
                jnp oracle — what CPU runs)
@@ -66,6 +68,35 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, lengths, *,
                                              lengths, sm_scale=sm_scale,
                                              interpret=interpret)
     raise ValueError(f"unknown paged decode impl {impl!r}")
+
+
+def ragged_paged_attention(q, k_pool, v_pool, seg_page_table, q_start,
+                           q_len, kv_len, *, max_q: int,
+                           sm_scale: float | None = None,
+                           impl: str = "gather", interpret: bool = False):
+    """Token-packed mixed prefill+decode attention against a paged pool —
+    the unified serving step's single attention dispatch.
+
+    q: (T, Hq, D) packed queries; k_pool, v_pool: (P, Hkv, page_size, D)
+    resident pools; seg_page_table: (S, max_pages) int32 per-segment page
+    ids; q_start/q_len/kv_len: (S,) segment table (token offset, new
+    tokens, total valid KV after insert); max_q: static q_len bound (the
+    engine's chunk size).  Returns (T, Hq, D).
+
+      gather : per-segment page gather + masked softmax (the jnp oracle)
+      pallas : one kernel, grid (segment x kv-head, page), scalar-prefetch
+               segment + page tables steering the DMA
+    """
+    if impl == "gather":
+        return ref.ragged_paged_reference(q, k_pool, v_pool, seg_page_table,
+                                          q_start, q_len, kv_len,
+                                          max_q=max_q, sm_scale=sm_scale)
+    if impl == "pallas":
+        from .ragged_attention import pallas_ragged_paged_attention
+        return pallas_ragged_paged_attention(
+            q, k_pool, v_pool, seg_page_table, q_start, q_len, kv_len,
+            max_q=max_q, sm_scale=sm_scale, interpret=interpret)
+    raise ValueError(f"unknown ragged paged impl {impl!r}")
 
 
 def expert_gemm(x, w, impl: str = "jnp", interpret: bool = False):

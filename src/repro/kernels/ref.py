@@ -115,15 +115,22 @@ def moe_gemm_reference(tokens: jax.Array, w: jax.Array) -> jax.Array:
 
 
 def paged_gather(pool: jax.Array, page_table: jax.Array) -> jax.Array:
-    """(P, ps, ...) pool + (B, max_pages) table -> (B, max_pages*ps, ...)
-    linearized per-request view.  The single definition of the page
-    linearization: the serving read path (models/attention.py) and the
-    kernel oracle below both use it, so they can never drift apart.  The
-    Pallas paged decode kernel walks the table instead of materializing
-    this."""
+    """(P, Hkv, ps, ...) pool + (B, max_pages) table ->
+    (B, max_pages*ps, Hkv, ...) linearized per-request view.
+
+    Pools keep the resident layout — head axis ahead of the page-token
+    axis, so one (page, head) tile is a contiguous kernel block — and this
+    gather restores the (tokens, heads) attention layout.  The single
+    definition of the page linearization: the serving read path
+    (models/attention.py) and the kernel oracles below all use it, so they
+    can never drift apart.  The Pallas paged kernels walk the table
+    instead of materializing this."""
     b, mp = page_table.shape
     g = jnp.take(pool, page_table.reshape(-1), axis=0, mode="clip")
-    return g.reshape((b, mp * pool.shape[1]) + pool.shape[2:])
+    g = g.reshape((b, mp) + pool.shape[1:])  # (B, mp, Hkv, ps, ...)
+    g = jnp.swapaxes(g, 2, 3)  # (B, mp, ps, Hkv, ...)
+    return g.reshape((b, mp * pool.shape[2], pool.shape[1])
+                     + pool.shape[3:])
 
 
 def paged_decode_reference(q: jax.Array, k_pool: jax.Array,
@@ -132,9 +139,60 @@ def paged_decode_reference(q: jax.Array, k_pool: jax.Array,
                            sm_scale: float | None = None) -> jax.Array:
     """Paged decode oracle: gather each slot's pages into a linear
     (B, max_pages * page_size, Hkv, D) view, then run masked decode
-    attention.  q: (B, 1, Hq, D); k_pool, v_pool: (P, page_size, Hkv, D);
+    attention.  q: (B, 1, Hq, D); k_pool, v_pool: (P, Hkv, page_size, D);
     page_table: (B, max_pages) int32; lengths: (B,) valid KV tokens."""
     return mha_reference(q, paged_gather(k_pool, page_table),
                          paged_gather(v_pool, page_table), causal=True,
                          sm_scale=sm_scale, kv_len=lengths,
                          q_offset=lengths - 1)
+
+
+def ragged_pack_indices(q_start: jax.Array, q_len: jax.Array, n_tokens: int,
+                        max_q: int) -> jax.Array:
+    """(T,) indices mapping each packed token to its row in an
+    (S, max_q)-padded segment-major layout.
+
+    ``q_start`` must be nondecreasing (the engine's fixed packed layout
+    is).  Tokens in packing gaps — past a segment's ``q_len`` but before
+    the next segment's start — clamp inside their segment and pick up
+    unspecified values; callers mask by segment.  Shared by the Pallas
+    ragged kernel's re-pack and the gather oracle, so the two can never
+    disagree about which output row a packed token reads.
+    """
+    t = jnp.arange(n_tokens)
+    seg = jnp.searchsorted(jnp.asarray(q_start), t, side="right") - 1
+    seg = jnp.clip(seg, 0, q_start.shape[0] - 1)
+    off = jnp.clip(t - jnp.asarray(q_start)[seg], 0, max_q - 1)
+    return seg * max_q + off
+
+
+def ragged_paged_reference(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, seg_page_table: jax.Array,
+                           q_start: jax.Array, q_len: jax.Array,
+                           kv_len: jax.Array, *, max_q: int,
+                           sm_scale: float | None = None) -> jax.Array:
+    """Ragged paged attention oracle (the unified mixed prefill+decode
+    step): per segment, gather its pages into a linear view and run causal
+    attention with ``kv_len`` masking and ``q_offset = kv_len - q_len``,
+    then re-pack the segment outputs to the token-packed layout.
+
+    q: (T, Hq, D) packed; k_pool, v_pool: (P, Hkv, page_size, D);
+    seg_page_table: (S, max_pages) int32; q_start/q_len/kv_len: (S,).
+    Returns (T, Hq, D).  Decode segments are q_len == 1 (see everything
+    valid); prefill chunks mask causally within the chunk; q_len == 0
+    segments are inactive.
+    """
+    s_count = seg_page_table.shape[0]
+    t = q.shape[0]
+    qp = jnp.pad(q, ((0, max_q), (0, 0), (0, 0)))
+    q_seg = jax.vmap(
+        lambda st: jax.lax.dynamic_slice_in_dim(qp, st, max_q, axis=0))(
+            jnp.asarray(q_start))  # (S, max_q, Hq, D)
+    ka = paged_gather(k_pool, seg_page_table)
+    va = paged_gather(v_pool, seg_page_table)
+    o = mha_reference(q_seg, ka, va, causal=True, sm_scale=sm_scale,
+                      kv_len=kv_len, q_offset=jnp.asarray(kv_len)
+                      - jnp.asarray(q_len))
+    flat = o.reshape((s_count * max_q,) + o.shape[2:])
+    idx = ragged_pack_indices(q_start, q_len, t, max_q)
+    return jnp.take(flat, idx, axis=0).astype(q.dtype)

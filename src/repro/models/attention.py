@@ -15,14 +15,23 @@ KV cache layouts (``ModelContext.cache_layout``):
           ``lengths`` and attends with a kv_len mask — GSPMD turns this
           into head-sharded or sequence-sharded attention depending on the
           sharding policy.
-  paged : a flat (n_pages, page_size, Hkv, Dh) pool per layer plus a
-          (B, max_pages) page-table indirection shared across layers
-          (:class:`PagedAttnCache`; the host half is
-          :mod:`repro.serving.paging`).  Decode scatters the new token into
-          its slot's current page and attends against the pages the page
-          table names — capacity scales with tokens *used*, not slots
-          reserved.  The int8 ``k_scale`` quantized path is preserved
-          (scale pools page alongside the values).
+  paged : a flat (n_pages, Hkv, page_size, Dh) pool per layer — the
+          *resident* layout, head axis ahead of the page-token axis so one
+          (page, head) tile is a contiguous kernel block and no per-call
+          transpose is needed — plus a (B, max_pages) page-table
+          indirection shared across layers (:class:`PagedAttnCache`; the
+          host half is :mod:`repro.serving.paging`).  Decode scatters the
+          new token into its slot's current page and attends against the
+          pages the page table names — capacity scales with tokens *used*,
+          not slots reserved.  The int8 ``k_scale`` quantized path is
+          preserved (scale pools page alongside the values).
+
+Token-packed unified step (:class:`PackedSegs`): the serving engine packs
+every active slot's decode token and every in-flight prompt's current
+prefill chunk into one ragged (T,) batch; the packed path below writes
+each token's K/V **directly into its request's pages** (no dense scratch
+cache, no insert-time scatter) and runs one ragged paged-attention
+dispatch over all segments.
 """
 
 from __future__ import annotations
@@ -37,6 +46,38 @@ from ..core.modelspec import ModelSpec
 from ..kernels import ops as kops
 from ..kernels.ref import paged_gather
 from .common import KeyGen, ModelContext, apply_rope, dense_init, rms_norm
+
+
+@dataclass(frozen=True)
+class PackedSegs:
+    """Segment table of one token-packed unified step (a pytree).
+
+    The packed query batch concatenates S *segments* — one per decode slot
+    and one per prefill row, at fixed, nondecreasing token offsets — so a
+    single dispatch serves every active request.  ``max_q`` (static) is
+    the widest segment the layout allows (the engine's chunk size).
+
+    ``n_decode`` (static) tells the attention path that the first
+    ``n_decode`` segments are single-token decode slots sitting at packed
+    offsets [0, n_decode): it then runs them as a max_q=1 sub-batch inside
+    the same dispatch, so decode slots never pay a chunk-wide padded query
+    tile.  0 means no static split is known (generic ragged packing).
+    """
+    q_start: jax.Array  # (S,) int32 token offset of each segment's queries
+    q_len: jax.Array  # (S,) int32 new tokens this step (0 = inactive)
+    kv_len: jax.Array  # (S,) int32 valid KV tokens *after* this step
+    page_table: jax.Array  # (S, max_pages) int32 pages each segment owns
+    max_q: int = 1
+    n_decode: int = 0
+
+    @property
+    def n_segs(self) -> int:
+        return self.page_table.shape[0]
+
+
+jax.tree_util.register_dataclass(
+    PackedSegs, data_fields=["q_start", "q_len", "kv_len", "page_table"],
+    meta_fields=["max_q", "n_decode"])
 
 
 def init_attention(spec: ModelSpec, keys: KeyGen, dtype) -> dict:
@@ -104,21 +145,24 @@ jax.tree_util.register_dataclass(
 class PagedAttnCache:
     """Per-layer paged KV pool (a pytree).
 
-    ``k``/``v`` are (n_pages, page_size, Hkv, Dh); which pages belong to
-    which request is the engine's page table (carried in
-    ``ModelCache.page_table``, shared by every attention layer).  Page 0 is
-    the reserved null page (see :mod:`repro.serving.paging`).  With int8
-    quantization the (n_pages, page_size, Hkv) scale pools ride along,
-    exactly like the dense layout's scale planes.
+    ``k``/``v`` are (n_pages, Hkv, page_size, Dh) — the resident layout:
+    the head axis sits ahead of the page-token axis so one (page, head)
+    tile is a contiguous block and the Pallas kernels consume the pools
+    without a per-call transpose.  Which pages belong to which request is
+    the engine's page table (carried in ``ModelCache.page_table``, shared
+    by every attention layer).  Page 0 is the reserved null page (see
+    :mod:`repro.serving.paging`).  With int8 quantization the
+    (n_pages, Hkv, page_size) scale pools ride along, exactly like the
+    dense layout's scale planes.
     """
-    k: jax.Array  # (P, page_size, Hkv, Dh)
+    k: jax.Array  # (P, Hkv, page_size, Dh)
     v: jax.Array
-    k_scale: jax.Array | None = None  # (P, page_size, Hkv) f32
+    k_scale: jax.Array | None = None  # (P, Hkv, page_size) f32
     v_scale: jax.Array | None = None
 
     @property
     def page_size(self) -> int:
-        return self.k.shape[1]
+        return self.k.shape[2]
 
 
 jax.tree_util.register_dataclass(
@@ -128,9 +172,9 @@ jax.tree_util.register_dataclass(
 
 def init_paged_attn_cache(spec: ModelSpec, n_pages: int, page_size: int,
                           dtype, quantized: bool = False) -> PagedAttnCache:
-    shape = (n_pages, page_size, spec.n_kv_heads, spec.d_head)
+    shape = (n_pages, spec.n_kv_heads, page_size, spec.d_head)
     if quantized:
-        sshape = (n_pages, page_size, spec.n_kv_heads)
+        sshape = (n_pages, spec.n_kv_heads, page_size)
         return PagedAttnCache(k=jnp.zeros(shape, jnp.int8),
                               v=jnp.zeros(shape, jnp.int8),
                               k_scale=jnp.zeros(sshape, jnp.float32),
@@ -153,6 +197,8 @@ def paged_insert_rows(paged: PagedAttnCache, dense: AttnCache, row,
     def scat(pool, scr):
         col = jax.lax.dynamic_slice_in_dim(scr, row, 1, axis=0)[0]  # (T,...)
         chunks = col.reshape((pages.shape[0], ps) + col.shape[1:])
+        # (mp, ps, Hkv, ...) -> the pool's resident (mp, Hkv, ps, ...)
+        chunks = jnp.swapaxes(chunks, 1, 2)
         return pool.at[pages].set(chunks.astype(pool.dtype),
                                   mode="drop", unique_indices=False)
 
@@ -255,10 +301,12 @@ def _paged_attention(spec: ModelSpec, ctx: ModelContext, cache:
                                    axis=1)[:, 0]
     offs = lengths % ps
 
-    def scat(pool, t):  # t: (B, 1, ...) new-token values
-        return pool.at[page_ids, offs].set(t[:, 0].astype(pool.dtype),
-                                           mode="drop",
-                                           unique_indices=False)
+    def scat(pool, t):  # t: (B, 1, Hkv, ...) new-token values
+        # resident pool layout (P, Hkv, ps, ...): token offset indexes the
+        # axis *behind* the heads
+        return pool.at[page_ids, :, offs].set(t[:, 0].astype(pool.dtype),
+                                              mode="drop",
+                                              unique_indices=False)
 
     kc, vc = scat(cache.k, k_store), scat(cache.v, v_store)
     new_cache = PagedAttnCache(
@@ -282,20 +330,98 @@ def _paged_attention(spec: ModelSpec, ctx: ModelContext, cache:
     return o, new_cache
 
 
+def _packed_paged_attention(spec: ModelSpec, ctx: ModelContext,
+                            cache: "PagedAttnCache", q, k, v,
+                            packed: PackedSegs):
+    """Token-packed unified step: write every packed token's K/V directly
+    into its request's pages (position ``kv_len - q_len + i`` for token i
+    of its segment; tokens outside any live segment land on the null
+    page), then one ragged paged-attention dispatch attends each segment
+    against exactly the pages it owns.  Numerically identical to running
+    each segment through the dense chunked-prefill / paged decode paths:
+    same insert-then-masked-attend order, same page linearization.
+    """
+    ps = cache.page_size
+    t = q.shape[1]
+    s_count, max_pages = packed.page_table.shape
+    quant = cache.k_scale is not None
+    if quant:
+        k_store, k_sc = _quantize_kv(k)
+        v_store, v_sc = _quantize_kv(v)
+    else:
+        k_store, v_store = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
+
+    # per-token destination page/offset, derived from the segment table
+    # (q_start is nondecreasing by construction)
+    tok = jnp.arange(t)
+    seg = jnp.clip(jnp.searchsorted(packed.q_start, tok, side="right") - 1,
+                   0, s_count - 1)
+    off_in_seg = tok - packed.q_start[seg]
+    valid = (off_in_seg >= 0) & (off_in_seg < packed.q_len[seg])
+    pos = packed.kv_len[seg] - packed.q_len[seg] + off_in_seg
+    pos = jnp.clip(pos, 0, max_pages * ps - 1)
+    page_ids = jnp.where(valid, packed.page_table[seg, pos // ps], 0)
+    offs = pos % ps
+
+    def scat(pool, tnew):  # tnew: (1, T, Hkv, ...) packed new values
+        return pool.at[page_ids, :, offs].set(tnew[0].astype(pool.dtype),
+                                              mode="drop",
+                                              unique_indices=False)
+
+    kc, vc = scat(cache.k, k_store), scat(cache.v, v_store)
+    new_cache = PagedAttnCache(
+        k=kc, v=vc,
+        k_scale=scat(cache.k_scale, k_sc) if quant else None,
+        v_scale=scat(cache.v_scale, v_sc) if quant else None)
+
+    if ctx.attn_impl == "pallas" and not quant:
+        impl, ka, va = "pallas", kc, vc
+    else:
+        impl, ka, va = "gather", kc, vc
+        if quant:
+            ka = (kc.astype(jnp.float32)
+                  * new_cache.k_scale[..., None]).astype(k.dtype)
+            va = (vc.astype(jnp.float32)
+                  * new_cache.v_scale[..., None]).astype(v.dtype)
+
+    nd = packed.n_decode
+    if 0 < nd < s_count and packed.max_q > 1:
+        # static decode/prefill split (same dispatch, two sub-batches):
+        # the nd decode segments run at max_q=1 instead of dragging a
+        # chunk-wide padded query tile through the kernel
+        o_dec = kops.ragged_paged_attention(
+            q[0, :nd], ka, va, packed.page_table[:nd], packed.q_start[:nd],
+            packed.q_len[:nd], packed.kv_len[:nd], max_q=1, impl=impl)
+        o_pre = kops.ragged_paged_attention(
+            q[0, nd:], ka, va, packed.page_table[nd:],
+            packed.q_start[nd:] - nd, packed.q_len[nd:],
+            packed.kv_len[nd:], max_q=packed.max_q, impl=impl)
+        o = jnp.concatenate([o_dec, o_pre], axis=0)
+    else:
+        o = kops.ragged_paged_attention(
+            q[0], ka, va, packed.page_table, packed.q_start, packed.q_len,
+            packed.kv_len, max_q=packed.max_q, impl=impl)
+    return o[None], new_cache
+
+
 def attention_block(spec: ModelSpec, ctx: ModelContext, params: dict,
                     x: jax.Array, positions: jax.Array,
                     cache: AttnCache | PagedAttnCache | None = None,
                     lengths: jax.Array | None = None,
-                    page_table: jax.Array | None = None
+                    page_table: jax.Array | None = None,
+                    packed: PackedSegs | None = None
                     ) -> tuple[jax.Array, AttnCache | PagedAttnCache | None]:
-    """x: (B, S, D).  Four modes:
+    """x: (B, S, D).  Five modes:
 
       * full pass (cache None): training / encoder forward,
       * prefill (dense cache, lengths == 0): fills cache[0:S],
       * decode  (dense cache, S == 1): inserts at ``lengths`` and attends
         against the cache prefix,
       * paged decode (PagedAttnCache, S == 1): scatters into the slot's
-        current page and attends via the page table.
+        current page and attends via the page table,
+      * packed unified step (PagedAttnCache + ``packed``): x is the
+        (1, T, D) token-packed mixed decode+prefill batch; K/V go directly
+        to pages and one ragged dispatch serves every segment.
     """
     b, s, _ = x.shape
     q, k, v = _project_qkv(spec, ctx, params, x, positions)
@@ -303,6 +429,12 @@ def attention_block(spec: ModelSpec, ctx: ModelContext, params: dict,
     new_cache = None
     if cache is None:
         o = _attend(spec, ctx, q, k, v, causal=spec.attn.causal)
+    elif isinstance(cache, PagedAttnCache) and packed is not None:
+        if spec.attn.kind == "swa":
+            raise NotImplementedError(
+                "the packed unified step has no sliding-window masking")
+        o, new_cache = _packed_paged_attention(spec, ctx, cache, q, k, v,
+                                               packed)
     elif isinstance(cache, PagedAttnCache):
         assert s == 1, "the paged layout serves single-token decode; " \
             "prefill runs on a dense scratch cache and is paged at insert"

@@ -243,6 +243,39 @@ class Model:
                                   lengths=cache.lengths + s,
                                   page_table=cache.page_table)
 
+    def unified_step(self, params, cache: ModelCache, tokens: jax.Array,
+                     positions: jax.Array, packed,
+                     *, embeds=None) -> tuple[jax.Array, ModelCache]:
+        """Token-packed unified serving step: every active slot's decode
+        token plus every in-flight prompt's current prefill chunk ride one
+        forward pass.  ``tokens``/``positions``: (T,) packed; ``packed``:
+        the :class:`~repro.models.attention.PackedSegs` segment table.
+        Prefill K/V are written directly into their pages by the packed
+        attention path (no dense scratch cache).  Returns per-segment
+        last-position logits (S, V) and the updated cache.  Requires the
+        paged cache layout and an attention-only stack.
+        """
+        x = self._embed_in(params, tokens[None], embeds)
+        x = self.ctx.shard(x, "batch", "seq_res", "act_embed")
+        x, new_layers = T.apply_stack(self.spec, self.ctx, params["layers"],
+                                      x, positions[None], cache=cache.layers,
+                                      lengths=cache.lengths,
+                                      page_table=cache.page_table,
+                                      packed=packed)
+        # each segment's logits come from its last valid packed position
+        # (inactive segments produce garbage rows the engine ignores)
+        last = packed.q_start + jnp.maximum(packed.q_len, 1) - 1
+        h = jnp.take(x[0], last, axis=0)  # (S, D)
+        logits = self._logits(params, h[None])[0]
+        # keep slot lengths current for the segments that advanced (the
+        # first max_slots segments are the decode slots, by layout)
+        b = cache.lengths.shape[0]
+        lengths = jnp.where(packed.q_len[:b] > 0,
+                            packed.kv_len[:b].astype(cache.lengths.dtype),
+                            cache.lengths)
+        return logits, ModelCache(layers=new_layers, lengths=lengths,
+                                  page_table=cache.page_table)
+
     def decode_step(self, params, cache: ModelCache, tokens: jax.Array,
                     *, embeds=None) -> tuple[jax.Array, ModelCache]:
         """One autoregressive step.  tokens: (B, 1) -> logits (B, V)."""

@@ -104,12 +104,17 @@ def _axes_one(spec: ModelSpec, cls: LayerClass) -> dict:
 
 def _apply_one(spec: ModelSpec, ctx: ModelContext, cls: LayerClass,
                params: dict, x, positions, cache, lengths,
-               page_table=None):
+               page_table=None, packed=None):
     if cls.kind == "attn":
         y, new_cache = attention_block(spec, ctx, params["mixer"], x,
                                        positions, cache, lengths,
-                                       page_table=page_table)
+                                       page_table=page_table,
+                                       packed=packed)
         x = x + y
+    elif packed is not None:
+        raise NotImplementedError(
+            "the token-packed unified step supports attention-only "
+            f"stacks; layer kind {cls.kind!r} carries sequential state")
     elif cls.kind == "mamba":
         y, new_cache = mamba_block(spec, ctx, params["mixer"], x, cache)
         x = x + y
@@ -173,9 +178,10 @@ def _cache_axes_one(spec: ModelSpec, cls: LayerClass,
     if cls.kind == "attn":
         if layout == "paged":
             # the page pool is indexed by page id, not request: only the
-            # kv-head axis is meaningfully shardable
-            kv = ("layers", None, None, "act_kv_heads", None)
-            sc = ("layers", None, None, "act_kv_heads") if quantized else None
+            # kv-head axis is meaningfully shardable (resident layout:
+            # (P, Hkv, page_size, Dh))
+            kv = ("layers", None, "act_kv_heads", None, None)
+            sc = ("layers", None, "act_kv_heads", None) if quantized else None
             return PagedAttnCache(k=kv, v=kv, k_scale=sc, v_scale=sc)
         kv = ("layers", "batch", "kv_seq", "act_kv_heads", None)
         sc = ("layers", "batch", "kv_seq", "act_kv_heads") if quantized \
@@ -214,10 +220,12 @@ def init_stack_cache(spec: ModelSpec, batch: int, max_len: int, dtype,
 
 def apply_stack(spec: ModelSpec, ctx: ModelContext, params: dict,
                 x: jax.Array, positions: jax.Array, cache=None,
-                lengths=None, page_table=None):
+                lengths=None, page_table=None, packed=None):
     """Run all layers.  cache is the stacked pytree from init_stack_cache
     (or None for a cache-free pass).  ``page_table`` is the shared
-    (B, max_pages) indirection when the attention caches are paged."""
+    (B, max_pages) indirection when the attention caches are paged;
+    ``packed`` the shared :class:`~repro.models.attention.PackedSegs`
+    segment table when x is a token-packed unified step."""
     period, repeats = stack_period(spec)
     classes = layer_classes(spec)[:period]
     with_cache = cache is not None
@@ -229,7 +237,7 @@ def apply_stack(spec: ModelSpec, ctx: ModelContext, params: dict,
             c_in = c_slice[f"pos{pos}"] if with_cache else None
             x, c_out = _apply_one(spec, ctx, cls, p_slice[f"pos{pos}"], x,
                                   positions, c_in, lengths,
-                                  page_table=page_table)
+                                  page_table=page_table, packed=packed)
             if with_cache:
                 new_c[f"pos{pos}"] = c_out
         return x, (new_c if with_cache else None)

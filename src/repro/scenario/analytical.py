@@ -124,6 +124,11 @@ def _chunked(sc: Scenario, spec, plat) -> tuple[Report, dict]:
     iter_t = sr.meta["iter_time"]
     thr = sr.meta["decode_tokens_per_s"]
     e_tok = sr.energy / max(c.decode_batch, 1)
+    # the two-dispatch baseline (decode pass + separate prefill pass):
+    # recorded alongside so predicted-vs-measured TPOT can be compared
+    # against either engine implementation
+    sr2 = chunked(spec, plat, sc.parallelism, sc.opt, sc.workload,
+                  c.chunk, c.decode_batch, c.decode_ctx, fused=False)
     rep = Report(
         scenario=sc, backend="analytical",
         status="ok" if sr.memory.fits else "oom",
@@ -131,7 +136,11 @@ def _chunked(sc: Scenario, spec, plat) -> tuple[Report, dict]:
         throughput_tok_s=thr, energy_j=sr.energy, energy_per_token_j=e_tok,
         max_concurrency=_max_concurrency(sc, spec, plat),
         fits_memory=sr.memory.fits, meets_slo=_meets(sc, None, iter_t),
-        extra={"chunked": _stage_dict(sr)})
+        extra={"chunked": _stage_dict(sr),
+               "chunked_two_dispatch": {
+                   "iter_time": sr2.meta["iter_time"],
+                   "tpot": sr2.meta["tpot"],
+                   "dispatches_per_iter": sr2.meta["dispatches_per_iter"]}})
     return rep, {"stage": sr}
 
 

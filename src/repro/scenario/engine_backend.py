@@ -22,6 +22,12 @@ Lowering rules:
     uses ``ChunkedSpec.chunk`` as the engine chunk size, speculative runs
     the real draft/target :class:`SpeculativeDecoder`.  Disaggregated
     serving has no single-host execution and reports ``unsupported``.
+  * ``engine_kw["unified"]=True`` lowers to the unified token-packed
+    engine step (one jitted dispatch per iteration, prefill K/V written
+    directly to pages); it forces the paged layout.  This is how the
+    analytical chunked-TPOT model (one fused pass per iteration,
+    ``core.stages.chunked``) gets measured against a real fused
+    implementation instead of a two-dispatch approximation.
   * ``opt.paged_kv`` lowers to the engine's paged KV layout
     (``cache_layout="paged"``, ``page_size=opt.kv_page_size``).  The pool
     size comes from ``engine_kw["n_pages"]``, else from an HBM budget
@@ -44,7 +50,7 @@ from .scenario import Scenario
 DEFAULTS = dict(max_slots=8, max_seq=256, prefill_rows=2, max_prompt=64,
                 max_new=32, n_requests=None, seed=0, temperature=0.0,
                 cache_layout=None, page_size=None, n_pages=None,
-                kv_budget_bytes=None)
+                kv_budget_bytes=None, unified=False)
 
 
 def lower_model(ref):
@@ -133,9 +139,9 @@ def _paged_lowering(sc: Scenario, spec, geo: dict, kw: dict) -> dict:
     reservation (pages beyond max_slots x max_seq can never be used).
     """
     paged = kw["cache_layout"] == "paged" or (
-        kw["cache_layout"] is None and sc.opt.paged_kv)
-    if not paged:
-        return {"cache_layout": "dense"}
+        kw["cache_layout"] is None and sc.opt.paged_kv) or kw["unified"]
+    if not paged:  # unified=True forces paged: the packed step writes
+        return {"cache_layout": "dense"}  # prefill K/V straight to pages
     ps = int(kw["page_size"] or sc.opt.kv_page_size)
     max_seq = geo["max_seq"]
     if max_seq % ps:  # keep the lowering runnable for any page size
@@ -181,7 +187,7 @@ def _run_engine(sc: Scenario, spec, model, params, kw: dict) -> Report:
     paging = _paged_lowering(sc, spec, geo, kw)
     cfg = EngineConfig(max_slots=int(kw["max_slots"]), max_seq=geo["max_seq"],
                        chunk_size=chunk, prefill_rows=int(kw["prefill_rows"]),
-                       **paging)
+                       unified=bool(kw["unified"]), **paging)
     eng = ServeEngine(model, params, cfg, rng=jax.random.key(int(kw["seed"])))
     reqs = _make_requests(sc, spec, geo, kw)
     eng.serve(reqs)
@@ -201,6 +207,7 @@ def _run_engine(sc: Scenario, spec, model, params, kw: dict) -> Report:
                                  "max_seq": cfg.max_seq,
                                  "chunk_size": cfg.chunk_size,
                                  "prefill_rows": cfg.prefill_rows,
+                                 "unified": cfg.unified,
                                  **paging},
                "model": spec.name})
 
@@ -208,12 +215,12 @@ def _run_engine(sc: Scenario, spec, model, params, kw: dict) -> Report:
 def _run_speculative(sc: Scenario, spec, model, params, kw: dict) -> Report:
     from ..serving.speculative import SpeculativeDecoder
 
-    if sc.opt.paged_kv or kw["cache_layout"] == "paged":
+    if sc.opt.paged_kv or kw["cache_layout"] == "paged" or kw["unified"]:
         # don't silently measure a dense run under a paged label
         return Report(scenario=sc, backend="engine", status="unsupported",
                       error="the speculative decoder runs draft/target on "
-                            "dense caches; paged_kv has no speculative "
-                            "lowering yet")
+                            "dense caches; paged_kv / unified has no "
+                            "speculative lowering yet")
 
     d_spec, d_model, d_params = lower_model(sc.speculative.draft)
     if d_spec.vocab != spec.vocab:

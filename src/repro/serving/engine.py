@@ -53,6 +53,25 @@ transfer-per-decode-step and no-retrace invariants hold in both layouts
 (the page table is a fixed-shape device array, re-uploaded host->device
 only when it changes).
 
+**Unified token-packed step** (``unified=True``, requires the paged
+layout and an attention-only stack): instead of one jitted decode
+dispatch plus one jitted prefill dispatch *per chunk-width group*, every
+engine step packs all decode tokens and all in-flight prefill chunks into
+one fixed-shape ragged batch — segments at fixed offsets (slot s's decode
+token at s; prefill row r's chunk at ``max_slots + r * chunk_size``),
+partial chunks padded and masked by the per-segment ``q_len`` — and
+drives it through one jitted ``unified_step`` + on-device sampling call.
+Prefill K/V are written **directly into their pages** inside that same
+forward pass, so the dense scratch cache and the insert-time scatter
+disappear entirely; a completed prompt "moves" into its decode slot by
+pure host bookkeeping (the pages already hold its KV).  The invariant
+strengthens to exactly **one jitted dispatch and one device->host
+transfer per step** regardless of how many prefill width-groups are in
+flight, and nothing retraces as widths vary (the packed shapes depend
+only on the engine geometry).  Greedy outputs stay token-identical to the
+two-dispatch path (asserted in tests).  ``EngineMetrics`` counts
+``dispatches`` / ``transfers_d2h`` so the collapse is measurable.
+
 The scheduler itself stays pure Python and therefore easy to fault-inject
 and test.
 """
@@ -60,6 +79,7 @@ and test.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import time
 from collections import deque
@@ -70,7 +90,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..compat import tree
-from ..models.attention import PagedAttnCache, paged_insert_rows
+from ..models.attention import (PackedSegs, PagedAttnCache,
+                                paged_insert_rows)
 from ..models.model import Model, ModelCache
 from .paging import PageAllocator
 from .sampling import SamplingConfig, sample_slots
@@ -121,6 +142,11 @@ class EngineConfig:
     #: pool capacity-equivalent to the dense reservation (the interesting
     #: configurations set it *lower* — that is the whole point)
     n_pages: int | None = None
+    #: unified token-packed step: decode tokens + prefill chunks of every
+    #: in-flight prompt ride ONE jitted dispatch per step, with prefill
+    #: K/V written directly into their pages (requires cache_layout=
+    #: "paged" and an attention-only stack)
+    unified: bool = False
 
 
 @dataclass
@@ -131,6 +157,13 @@ class EngineMetrics:
     prefill_calls: int = 0
     prefill_tokens: int = 0
     generated_tokens: int = 0
+    # -- dispatch accounting --------------------------------------------------
+    #: jitted device dispatches issued (decode, prefill groups, inserts,
+    #: row resets, first-token samples — or exactly one per step when the
+    #: unified token-packed path is on)
+    dispatches: int = 0
+    #: device->host transfers (sampled-token pulls)
+    transfers_d2h: int = 0
     start_t: float = 0.0
     end_t: float = 0.0
     occupancy_sum: float = 0.0  # sum over steps of active/max_slots
@@ -169,6 +202,12 @@ class EngineMetrics:
             "prefill_calls": self.prefill_calls,
             "prefill_tokens": self.prefill_tokens,
             "generated_tokens": self.generated_tokens,
+            "dispatches": self.dispatches,
+            "transfers_d2h": self.transfers_d2h,
+            "dispatches_per_step": (self.dispatches / self.steps
+                                    if self.steps else 0.0),
+            "transfers_per_step": (self.transfers_d2h / self.steps
+                                   if self.steps else 0.0),
             "wall_s": self.wall_s,
             "tokens_per_s": self.tokens_per_s,
             "mean_slot_occupancy": self.mean_occupancy,
@@ -205,6 +244,20 @@ class ServeEngine:
         if config.cache_layout not in ("dense", "paged"):
             raise ValueError(f"unknown cache_layout "
                              f"{config.cache_layout!r}")
+        if config.unified:
+            if config.cache_layout != "paged":
+                raise ValueError(
+                    "unified=True needs cache_layout='paged': the packed "
+                    "step writes prefill K/V directly into KV pages")
+            if any(k == "ssm" for k in model.spec.layer_kinds()):
+                raise ValueError(
+                    "unified=True supports attention-only stacks; "
+                    f"{model.spec.name!r} has SSM layers whose sequential "
+                    "state has no packed-segment forward")
+            if model.spec.attn.kind == "swa":
+                raise ValueError("unified=True has no sliding-window "
+                                 "masking in the ragged kernel yet")
+        self.unified = config.unified
         self.paged = config.cache_layout == "paged"
         if self.paged:
             if config.max_seq % config.page_size:
@@ -243,14 +296,35 @@ class ServeEngine:
         else:
             self.cache = model.init_cache(config.max_slots, config.max_seq,
                                           layout="dense")
-        # prefill always runs on dense scratch rows; completed prompts are
-        # scattered into their pages at insert time
-        self.scratch = model.init_cache(config.prefill_rows, config.max_seq,
-                                        layout="dense")
-        # prefill bookkeeping: scratch row -> in-flight request / position
+        if self.unified:
+            # the packed step writes prefill K/V straight into pages — no
+            # dense scratch cache exists at all
+            self.scratch = None
+        else:
+            # prefill runs on dense scratch rows; completed prompts are
+            # scattered into their pages at insert time
+            self.scratch = model.init_cache(config.prefill_rows,
+                                            config.max_seq, layout="dense")
+        # prefill bookkeeping: prefill row -> in-flight request / position
         self._prefills: dict[int, Request] = {}
         self._prefill_pos: dict[int, int] = {}
         self._free_rows = list(range(config.prefill_rows))
+
+        # fixed packed layout of the unified step: decode slot s's token at
+        # offset s, prefill row r's chunk at max_slots + r * chunk_size —
+        # shapes depend only on the geometry, so nothing ever retraces
+        self.n_segs = config.max_slots + config.prefill_rows
+        self.t_pack = (config.max_slots
+                       + config.prefill_rows * config.chunk_size)
+        self._seg_start = np.concatenate([
+            np.arange(config.max_slots, dtype=np.int32),
+            config.max_slots + np.arange(config.prefill_rows,
+                                         dtype=np.int32)
+            * config.chunk_size])
+        # the layouts are static: keep their device copies resident
+        self._seg_start_dev = jnp.asarray(self._seg_start)
+        self._seg_start_decode_dev = jnp.asarray(
+            self._seg_start[:config.max_slots])
 
         # host mirrors (np, never synced from device): next-token feed,
         # per-slot sampling params, per-slot sequence lengths
@@ -262,9 +336,19 @@ class ServeEngine:
         # device copy of (temps, topks, topps): they only change on slot
         # churn, so cache the upload and invalidate on insert
         self._dev_sampling = None
+        # device-resident next-token feed: the previous decode step's
+        # sampled tokens never leave the device (the donated (B, 1) buffer
+        # is updated in place); None = stale, re-upload from the host
+        # mirror (slot churn wrote a first token)
+        self._dev_tokens = None
+        # unified-path analogues: the (B,) packed decode feed and the
+        # (B, max_pages) slot page table, cached on device and invalidated
+        # on slot churn / page-table change
+        self._dev_utokens = None
+        self._dev_ptab = None
 
         self._jit_decode = jax.jit(self._decode_and_sample,
-                                   donate_argnums=(1,))
+                                   donate_argnums=(1, 2))
         self._jit_prefill = jax.jit(self._prefill_masked,
                                     donate_argnums=(1,))
         self._jit_insert = jax.jit(self._insert, donate_argnums=(0,))
@@ -272,16 +356,51 @@ class ServeEngine:
                                          donate_argnums=(0,))
         self._jit_reset_row = jax.jit(self._reset_row, donate_argnums=(0,))
         self._jit_sample = jax.jit(sample_slots)
+        # two fixed packed profiles, both one dispatch per step: the mixed
+        # decode+prefill layout, and a decode-only layout (T = max_slots,
+        # max_q = 1) so idle prefill rows cost nothing.  Shapes depend
+        # only on the geometry — nothing retraces as widths vary.
+        self._jit_unified = jax.jit(
+            functools.partial(self._unified_and_sample,
+                              max_q=max(config.chunk_size, 1),
+                              n_decode=config.max_slots),
+            donate_argnums=(1,))
+        self._jit_unified_decode = jax.jit(
+            functools.partial(self._unified_and_sample, max_q=1,
+                              n_decode=0),
+            donate_argnums=(1,))
 
     # -- jitted device functions ---------------------------------------------
     def _decode_and_sample(self, params, cache: ModelCache, tokens, step_key,
                            temps, topks, topps):
         """All slots: one decode step + on-device per-slot sampling.  The
-        (B,) token vector is the only thing the host ever pulls back."""
+        (B,) token vector is the only thing the host ever pulls back; the
+        (B, 1) next-step feed stays resident on device (reusing the
+        donated input buffer), so steady-state decode re-uploads nothing."""
         logits, new_cache = self.model.decode_step(params, cache, tokens)
         keys = jax.random.split(step_key, self.cfg.max_slots)
         toks = sample_slots(logits, keys, temps, topks, topps)
-        return toks, new_cache
+        return toks, toks[:, None], new_cache
+
+    def _unified_and_sample(self, params, cache: ModelCache, tokens,
+                            positions, q_start, q_len, kv_len, seg_ptab,
+                            step_key, temps, topks, topps, *, max_q,
+                            n_decode):
+        """The whole engine step as ONE dispatch: packed mixed
+        decode+prefill forward (K/V straight to pages) + per-segment
+        on-device sampling.  The (S,) token vector — decode samples for
+        the slot segments, first-token samples for completing prefill
+        segments — is the step's single device->host transfer."""
+        packed = PackedSegs(q_start=q_start, q_len=q_len, kv_len=kv_len,
+                            page_table=seg_ptab, max_q=max_q,
+                            n_decode=n_decode)
+        logits, new_cache = self.model.unified_step(params, cache, tokens,
+                                                    positions, packed)
+        keys = jax.random.split(step_key, q_len.shape[0])
+        toks = sample_slots(logits, keys, temps, topks, topps)
+        # the first max_slots samples are next step's decode feed: keep a
+        # device-resident copy so steady-state decode re-uploads nothing
+        return toks, toks[:self.cfg.max_slots], new_cache
 
     def _prefill_masked(self, params, scratch: ModelCache, tokens, mask):
         """Batched chunked prefill over all scratch rows; ``mask`` selects,
@@ -359,17 +478,21 @@ class ServeEngine:
 
     # -- public API --------------------------------------------------------------
     def submit(self, req: Request) -> int:
+        req.rid = next(self._ids)
         if self.paged:
             need = self.pager.pages_for(len(req.prompt) + 1)
             # a slot's page-table row holds max_pages entries (= max_seq
             # tokens) and the pool can never lend more than usable_pages
             limit = min(self.max_pages, self.pager.usable_pages)
             if need > limit:
+                cap = min(self.max_pages * self.cfg.page_size,
+                          self.pager.usable_pages * self.cfg.page_size)
                 raise ValueError(
-                    f"prompt needs {need} pages but a request can hold at "
-                    f"most {limit} (max_pages={self.max_pages}, usable "
-                    f"pool={self.pager.usable_pages})")
-        req.rid = next(self._ids)
+                    f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                    f"needs {need} KV pages but per-request capacity is "
+                    f"{limit} pages = {cap} tokens (max_pages="
+                    f"{self.max_pages} x page_size={self.cfg.page_size}, "
+                    f"usable pool={self.pager.usable_pages})")
         req.state = "queued"
         req.submit_t = time.perf_counter()
         self.queue.append(req)
@@ -401,7 +524,10 @@ class ServeEngine:
             self._prefills[row] = req
             self._prefill_pos[row] = 0
             req.state = "prefill"
-            self.scratch = self._jit_reset_row(self.scratch, jnp.int32(row))
+            if not self.unified:  # unified prefill has no scratch to reset
+                self.scratch = self._jit_reset_row(self.scratch,
+                                                   jnp.int32(row))
+                self.metrics.dispatches += 1
 
     # -- prefill --------------------------------------------------------------
     def _prefill_step(self) -> None:
@@ -433,6 +559,7 @@ class ServeEngine:
             self.params, self.scratch, jnp.asarray(toks), jnp.asarray(mask))
         self.metrics.prefill_calls += 1
         self.metrics.prefill_tokens += w * len(rows)
+        self.metrics.dispatches += 1
         finishing = []
         for row in rows:
             self._prefill_pos[row] += w
@@ -458,44 +585,28 @@ class ServeEngine:
         first = np.asarray(self._jit_sample(
             logits, keys, jnp.asarray(temps), jnp.asarray(topks),
             jnp.asarray(topps)))
+        self.metrics.dispatches += 1
+        self.metrics.transfers_d2h += 1
         now = time.perf_counter()
-        for row in rows:
-            req = self._prefills.pop(row)
-            del self._prefill_pos[row]
-            tok = int(first[row])
-            src_len = len(self._src(req))  # tokens the prefill processed
-            if not req.output:  # resumed requests keep their original TTFT
-                req.ttft_steps = self.steps
-                req.first_token_t = now
-            req.output.append(tok)
-            self.metrics.generated_tokens += 1
-            slot = self.free_slots.pop()
-            req.slot = slot
+
+        def install(req, slot, row):
+            """Device insert: copy the scratch row into the decode cache
+            (scattered into the request's pages in the paged layout)."""
             if self.paged:
                 pages = self._ptab_row(req.rid)
                 self._ptab[slot] = pages
+                self._dev_ptab = None
                 self.cache = self._jit_insert_paged(
                     self.cache, self.scratch, jnp.int32(slot),
                     jnp.int32(row), jnp.asarray(pages))
             else:
                 self.cache = self._jit_insert(self.cache, self.scratch,
-                                              jnp.int32(slot), jnp.int32(row))
-            self._free_rows.append(row)
-            self._lengths[slot] = src_len
-            if (len(req.output) >= req.max_new_tokens
-                    or (req.eos_id is not None and tok == req.eos_id)):
-                req.state = "done"
-                req.finish_t = now
-                self._release_slot(slot, req)
-                self.finished.append(req)
-                continue
-            req.state = "decode"
-            self.active[slot] = req
-            self._tokens[slot, 0] = tok
-            self._temps[slot] = req.sampling.temperature
-            self._topks[slot] = req.sampling.top_k
-            self._topps[slot] = req.sampling.top_p
-            self._dev_sampling = None  # re-upload on next decode step
+                                              jnp.int32(slot),
+                                              jnp.int32(row))
+            self.metrics.dispatches += 1
+
+        for row in rows:
+            self._promote_prefill(row, int(first[row]), now, install)
 
     # -- paged bookkeeping ----------------------------------------------------
     def _ptab_row(self, rid: int) -> np.ndarray:
@@ -515,6 +626,7 @@ class ServeEngine:
             self.pager.release(req.rid)
             self._ptab[slot] = 0
             self._ptab_dirty = True
+            self._dev_ptab = None
 
     def _preempt(self, slot: int) -> None:
         """Victim preemption: push an active request back to the queue head
@@ -566,6 +678,7 @@ class ServeEngine:
                 if held != int(np.count_nonzero(self._ptab[slot])):
                     self._ptab[slot] = self._ptab_row(req.rid)
                     self._ptab_dirty = True
+                    self._dev_ptab = None
 
     def _sync_page_table(self) -> None:
         if self._ptab_dirty:
@@ -588,14 +701,26 @@ class ServeEngine:
             self._dev_sampling = (jnp.asarray(self._temps),
                                   jnp.asarray(self._topks),
                                   jnp.asarray(self._topps))
-        sampled, self.cache = self._jit_decode(
-            self.params, self.cache, jnp.asarray(self._tokens), step_key,
-            *self._dev_sampling)
+        # steady-state decode feeds the device-resident buffer from the
+        # previous step (donated in, so XLA updates it in place); only
+        # slot churn forces a host re-upload
+        feed = self._dev_tokens
+        if feed is None:
+            feed = jnp.asarray(self._tokens)
+        sampled, self._dev_tokens, self.cache = self._jit_decode(
+            self.params, self.cache, feed, step_key, *self._dev_sampling)
         # The one device->host transfer of the step: the sampled (B,)
         # token vector.  Everything below reads host numpy only.
         toks = np.asarray(sampled)
         self.metrics.decode_steps += 1
-        now = time.perf_counter()
+        self.metrics.dispatches += 1
+        self.metrics.transfers_d2h += 1
+        self._finish_decode_slots(toks, time.perf_counter())
+
+    def _finish_decode_slots(self, toks, now: float) -> None:
+        """Shared decode bookkeeping (two-dispatch and unified paths must
+        never drift): append each active slot's sampled token, advance
+        lengths, exit on max_new / eos / max_seq, free on finish."""
         for slot, req in list(self.active.items()):
             tok = int(toks[slot])
             req.output.append(tok)
@@ -614,6 +739,167 @@ class ServeEngine:
             else:
                 self._tokens[slot, 0] = tok
 
+    def _promote_prefill(self, row: int, tok: int, now: float,
+                         install) -> None:
+        """Shared prefill-completion bookkeeping: record the first token
+        and move the request from its prefill row into a decode slot.
+        ``install(req, slot, row)`` puts the request's KV where the slot
+        will read it (device insert on the two-dispatch path; a host
+        page-table row on the unified path, whose pages already hold it).
+        """
+        req = self._prefills.pop(row)
+        del self._prefill_pos[row]
+        src_len = len(self._src(req))  # tokens the prefill processed
+        if not req.output:  # resumed requests keep their original TTFT
+            req.ttft_steps = self.steps
+            req.first_token_t = now
+        req.output.append(tok)
+        self.metrics.generated_tokens += 1
+        slot = self.free_slots.pop()
+        req.slot = slot
+        install(req, slot, row)
+        self._free_rows.append(row)
+        self._lengths[slot] = src_len
+        if (len(req.output) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id)):
+            req.state = "done"
+            req.finish_t = now
+            self._release_slot(slot, req)
+            self.finished.append(req)
+            return
+        req.state = "decode"
+        self.active[slot] = req
+        self._tokens[slot, 0] = tok
+        self._temps[slot] = req.sampling.temperature
+        self._topks[slot] = req.sampling.top_k
+        self._topps[slot] = req.sampling.top_p
+        # slot churn: every cached device mirror is stale
+        self._dev_sampling = None
+        self._dev_tokens = None
+        self._dev_utokens = None
+
+    # -- unified token-packed step --------------------------------------------
+    def _pack_guard(self, req: Request, src_len: int) -> None:
+        """A segment whose context can never fit its page-table row must
+        fail loudly at pack time, not inside the kernel's index map."""
+        cap = self.max_pages * self.cfg.page_size
+        if src_len + 1 > cap:
+            raise ValueError(
+                f"request {req.rid}: packing a {src_len}-token context "
+                f"exceeds the per-request KV capacity of {cap} tokens "
+                f"(max_pages={self.max_pages} x page_size="
+                f"{self.cfg.page_size})")
+
+    def _unified_step(self) -> None:
+        """The whole iteration in ONE jitted dispatch: all active slots'
+        decode tokens and all in-flight prompts' current chunks packed
+        into the fixed ragged layout, prefill K/V written directly to
+        pages, every segment sampled on device.  The sampled (S,) vector
+        is the step's single device->host transfer."""
+        self._grow_pages()
+        if not (self.active or self._prefills):
+            return
+        nslots, csize = self.cfg.max_slots, self.cfg.chunk_size
+        # two static packed profiles (one compiled program each): the
+        # decode-only layout (T = max_slots) when no prefill is in flight,
+        # else the full mixed layout — idle prefill rows never pad the
+        # decode hot path, and the step stays ONE dispatch either way
+        mixed = bool(self._prefills)
+        n_segs, t_pack = (self.n_segs, self.t_pack) if mixed \
+            else (nslots, nslots)
+        positions = np.zeros((t_pack,), np.int32)
+        q_len = np.zeros((n_segs,), np.int32)
+        kv_len = np.zeros((n_segs,), np.int32)
+        # decode segments: slot s's next token at packed offset s
+        for slot in self.active:
+            positions[slot] = self._lengths[slot]
+            q_len[slot] = 1
+            kv_len[slot] = self._lengths[slot] + 1
+        widths: dict[int, int] = {}
+        if mixed:
+            tokens = np.zeros((t_pack,), np.int32)
+            tokens[:nslots] = self._tokens[:, 0]
+            seg_ptab = np.zeros((n_segs, self.max_pages), np.int32)
+            seg_ptab[:nslots] = self._ptab
+            temps = np.zeros((n_segs,), np.float32)
+            topks = np.zeros((n_segs,), np.int32)
+            topps = np.ones((n_segs,), np.float32)
+            temps[:nslots] = self._temps
+            topks[:nslots] = self._topks
+            topps[:nslots] = self._topps
+            # prefill segments: row r's current chunk at nslots + r * csize
+            for row, req in self._prefills.items():
+                src = self._src(req)
+                self._pack_guard(req, len(src))
+                lo = self._prefill_pos[row]
+                w = min(csize, len(src) - lo)
+                seg, qs = nslots + row, nslots + row * csize
+                tokens[qs:qs + w] = src[lo:lo + w]
+                positions[qs:qs + w] = np.arange(lo, lo + w)
+                q_len[seg] = w
+                kv_len[seg] = lo + w
+                seg_ptab[seg] = self._ptab_row(req.rid)
+                widths[row] = w
+                if lo + w >= len(src):  # completes: sample with its config
+                    s = req.sampling
+                    temps[seg] = s.temperature
+                    topks[seg] = s.top_k
+                    topps[seg] = s.top_p
+            fn, seg_start = self._jit_unified, self._seg_start_dev
+            tokens_dev = jnp.asarray(tokens)
+            ptab_dev = jnp.asarray(seg_ptab)
+            sampling_dev = (jnp.asarray(temps), jnp.asarray(topks),
+                            jnp.asarray(topps))
+        else:
+            # decode-only steady state: tokens, sampling params and the
+            # slot page table all live on device already — nothing but
+            # positions/lengths (which advance every step) is uploaded
+            fn, seg_start = self._jit_unified_decode, \
+                self._seg_start_decode_dev
+            tokens_dev = self._dev_utokens
+            if tokens_dev is None:
+                tokens_dev = jnp.asarray(self._tokens[:, 0])
+            if self._dev_ptab is None:
+                self._dev_ptab = jnp.asarray(self._ptab)
+            ptab_dev = self._dev_ptab
+            if self._dev_sampling is None:
+                self._dev_sampling = (jnp.asarray(self._temps),
+                                      jnp.asarray(self._topks),
+                                      jnp.asarray(self._topps))
+            sampling_dev = self._dev_sampling
+        self.rng, step_key = jax.random.split(self.rng)
+        sampled, self._dev_utokens, self.cache = fn(
+            self.params, self.cache, tokens_dev, jnp.asarray(positions),
+            seg_start, jnp.asarray(q_len), jnp.asarray(kv_len), ptab_dev,
+            step_key, *sampling_dev)
+        # the step's only device->host transfer: the (S,) sampled tokens
+        toks = np.asarray(sampled)
+        self.metrics.dispatches += 1
+        self.metrics.transfers_d2h += 1
+        now = time.perf_counter()
+        if self.active:
+            self.metrics.decode_steps += 1
+        self._finish_decode_slots(toks, now)
+        # -- prefill bookkeeping ----------------------------------------------
+        if widths:
+            self.metrics.prefill_calls += 1
+            self.metrics.prefill_tokens += sum(widths.values())
+        finishing = [row for row, w in widths.items()
+                     if self._prefill_pos[row] + w
+                     >= len(self._src(self._prefills[row]))]
+        for row, w in widths.items():
+            self._prefill_pos[row] += w
+
+        def install(req, slot, row):
+            """The pages already hold the prompt's KV — "inserting" into
+            a decode slot is pure host bookkeeping."""
+            self._ptab[slot] = self._ptab_row(req.rid)
+            self._dev_ptab = None
+
+        for row in finishing:
+            self._promote_prefill(row, int(toks[nslots + row]), now,
+                                  install)
+
     # -- main loop ------------------------------------------------------------
     @property
     def _prefilling(self) -> bool:
@@ -621,13 +907,16 @@ class ServeEngine:
 
     def step(self) -> None:
         """One engine iteration: a decode step for all active slots plus a
-        prefill chunk for every in-flight prompt (decode-priority order)."""
+        prefill chunk for every in-flight prompt (decode-priority order) —
+        or, with ``unified=True``, both packed into one dispatch."""
         if self.metrics.start_t == 0.0:
             self.metrics.start_t = time.perf_counter()
         self.steps += 1
         self.metrics.steps += 1
         self._admit()
-        if self.cfg.decode_priority:
+        if self.unified:
+            self._unified_step()
+        elif self.cfg.decode_priority:
             self._decode_step()
             self._prefill_step()
         else:

@@ -140,7 +140,8 @@ def test_paged_decode_kernel_vs_gather_oracle(B, Hq, Hkv, D, P, ps, mp,
     masked softmax, across partial last pages and null-page padding."""
     rng = np.random.default_rng(0)
     q = t((B, 1, Hq, D), 1, dtype)
-    kp, vp = t((P, ps, Hkv, D), 2, dtype), t((P, ps, Hkv, D), 3, dtype)
+    # resident pool layout: (P, Hkv, page_size, D)
+    kp, vp = t((P, Hkv, ps, D), 2, dtype), t((P, Hkv, ps, D), 3, dtype)
     # each slot owns a distinct page run; unused tail entries -> null page 0
     pt = np.zeros((B, mp), np.int32)
     free = list(range(1, P))
@@ -169,22 +170,122 @@ def test_paged_decode_gather_matches_dense_reference():
     q = t((B, 1, Hq, D), 1)
     k, v = t((B, T, Hkv, D), 2), t((B, T, Hkv, D), 3)
     lengths = jnp.asarray([13, 27], jnp.int32)
-    # build the pool by slicing the dense cache into pages
+    # build the pool by slicing the dense cache into pages (resident
+    # layout: head axis ahead of the page-token axis)
     mp = T // ps
-    kp = [jnp.zeros((ps, Hkv, D))]
-    vp = [jnp.zeros((ps, Hkv, D))]
+    kp = [jnp.zeros((Hkv, ps, D))]
+    vp = [jnp.zeros((Hkv, ps, D))]
     pt = np.zeros((B, mp), np.int32)
     for b in range(B):
         for p in range(mp):
             pt[b, p] = len(kp)
-            kp.append(k[b, p * ps:(p + 1) * ps])
-            vp.append(v[b, p * ps:(p + 1) * ps])
+            kp.append(jnp.swapaxes(k[b, p * ps:(p + 1) * ps], 0, 1))
+            vp.append(jnp.swapaxes(v[b, p * ps:(p + 1) * ps], 0, 1))
     kp, vp = jnp.stack(kp), jnp.stack(vp)
     want = ref.mha_reference(q, k, v, causal=False, kv_len=lengths,
                              q_offset=lengths - 1)
     got = kops.paged_decode_attention(q, kp, vp, jnp.asarray(pt), lengths,
                                       impl="gather")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ragged paged attention kernel (the unified mixed prefill+decode dispatch)
+# ---------------------------------------------------------------------------
+
+def _ragged_case(rng, segs, Hq, Hkv, D, ps, mp, max_q, dtype=jnp.float32):
+    """Build a packed case from (q_len, kv_len) segment tuples.  Segments
+    pack back-to-back; every segment gets a distinct page run."""
+    S = len(segs)
+    P = 1 + sum(-(-kv // ps) for _, kv in segs) + 1
+    kp = t((P, Hkv, ps, D), 11, dtype)
+    vp = t((P, Hkv, ps, D), 12, dtype)
+    pt = np.zeros((S, mp), np.int32)
+    free = list(range(1, P))
+    q_start, q_len, kv_len = [], [], []
+    off = 0
+    for ql, kl in segs:
+        q_start.append(off)
+        q_len.append(ql)
+        kv_len.append(kl)
+        for i in range(-(-kl // ps)):
+            pt[len(q_start) - 1, i] = free.pop(0)
+        off += ql
+    T = max(off, 1)
+    q = t((T, Hq, D), 13, dtype)
+    return (q, kp, vp, jnp.asarray(pt), jnp.asarray(q_start, jnp.int32),
+            jnp.asarray(q_len, jnp.int32), jnp.asarray(kv_len, jnp.int32))
+
+
+def _ragged_valid_rows(q_start, q_len, T):
+    valid = np.zeros((T,), bool)
+    for s, l in zip(np.asarray(q_start), np.asarray(q_len)):
+        valid[s:s + l] = True
+    return valid
+
+
+@pytest.mark.parametrize("segs", [
+    # mixed: two decode slots, an inactive segment, two prefill chunks
+    [(1, 7), (1, 13), (0, 0), (8, 8), (5, 11)],
+    # decode-only packing (every segment one token)
+    [(1, 5), (1, 9), (1, 16), (1, 1)],
+    # empty-prefill: idle rows ride along as q_len == 0 segments
+    [(1, 6), (0, 0), (0, 0)],
+    # prefill-only, partial last pages
+    [(7, 7), (3, 15)],
+])
+def test_ragged_paged_kernel_vs_gather_oracle(segs):
+    """One ragged dispatch over mixed decode + prefill segments must equal
+    the per-segment gather + masked softmax oracle, including causal
+    masking within prefill chunks and inactive segments."""
+    rng = np.random.default_rng(0)
+    Hq, Hkv, D, ps, mp, max_q = 4, 2, 16, 4, 6, 8
+    args = _ragged_case(rng, segs, Hq, Hkv, D, ps, mp, max_q)
+    want = kops.ragged_paged_attention(*args, max_q=max_q, impl="gather")
+    got = kops.ragged_paged_attention(*args, max_q=max_q, impl="pallas",
+                                      interpret=True)
+    valid = _ragged_valid_rows(args[4], args[5], args[0].shape[0])
+    np.testing.assert_allclose(np.asarray(got, np.float32)[valid],
+                               np.asarray(want, np.float32)[valid],
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_ragged_decode_only_matches_paged_decode_oracle():
+    """A decode-only packing must reproduce the single-token paged decode
+    oracle slot for slot (same pages, same lengths)."""
+    rng = np.random.default_rng(1)
+    Hq, Hkv, D, ps, mp, max_q = 4, 2, 8, 4, 4, 4
+    segs = [(1, 6), (1, 11), (1, 3)]
+    q, kp, vp, pt, qs, ql, kl = _ragged_case(rng, segs, Hq, Hkv, D, ps, mp,
+                                             max_q)
+    got = kops.ragged_paged_attention(q, kp, vp, pt, qs, ql, kl,
+                                      max_q=max_q, impl="pallas",
+                                      interpret=True)
+    want = ref.paged_decode_reference(q[:, None], kp, vp, pt, kl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want[:, 0]),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_ragged_prefill_chunk_matches_dense_chunk():
+    """A prefill-chunk segment (causal within the chunk, full visibility
+    of its earlier context) must match dense chunked-prefill attention on
+    the linearized cache."""
+    rng = np.random.default_rng(2)
+    Hq, Hkv, D, ps, mp, max_q = 4, 2, 8, 4, 4, 6
+    lo, w = 5, 6  # chunk [5, 11) of an 11-token context
+    segs = [(w, lo + w)]
+    q, kp, vp, pt, qs, ql, kl = _ragged_case(rng, segs, Hq, Hkv, D, ps, mp,
+                                             max_q)
+    got = kops.ragged_paged_attention(q, kp, vp, pt, qs, ql, kl,
+                                      max_q=max_q, impl="pallas",
+                                      interpret=True)
+    ka = ref.paged_gather(kp, pt)
+    va = ref.paged_gather(vp, pt)
+    want = ref.mha_reference(q[None], ka, va, causal=True,
+                             kv_len=jnp.asarray([lo + w]),
+                             q_offset=jnp.asarray([lo]))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want[0]),
                                atol=1e-5, rtol=1e-5)
 
 

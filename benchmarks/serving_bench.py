@@ -13,6 +13,8 @@ trajectory (tokens/s, TTFT, TPOT, slot occupancy per cell).
         --out artifacts/benchmarks/paged_kv.json   # dense-vs-paged capacity
     PYTHONPATH=src python benchmarks/serving_bench.py --compare-unified \
         --out artifacts/benchmarks/unified_step.json  # one-dispatch win
+    PYTHONPATH=src python benchmarks/serving_bench.py --speculative \
+        --out artifacts/benchmarks/speculative_sync.json  # sync batching
 
 Every cell reports peak KV bytes and cache utilization alongside
 throughput/latency (``kv_reserved_bytes`` / ``kv_peak_bytes`` /
@@ -286,6 +288,86 @@ def compare_unified(sc, args) -> dict:
     return out
 
 
+def compare_speculative(sc, args) -> dict:
+    """Per-token-sync vs batched-sync speculative decoding on identical
+    prompts (self-draft): the decoder's draft loop used to block on the
+    host once per proposed token plus once per verified position; the
+    batched path samples proposals on device and pulls the whole
+    accept/reject payload in ONE ``jax.device_get`` per draft window.
+    Records tokens/s and measured host syncs per verify round for both."""
+    from repro.scenario.engine_backend import lower_model
+    from repro.serving.speculative import SpeculativeDecoder
+
+    spec, model, params = lower_model(sc.model)
+    rng = np.random.default_rng(args.seed)
+    lo, hi = MIXES["mixed"]
+    prompts = [[int(t) for t in rng.integers(0, spec.vocab, size=int(r))]
+               for r in rng.integers(lo, hi, size=args.requests)]
+
+    out = {"n_spec": args.n_spec, "max_new_tokens": args.max_new,
+           "n_prompts": len(prompts), "temperature": 1e-3}
+    for mode in ("per_token_sync", "batched_sync"):
+        batched = mode == "batched_sync"
+        # warm the jitted programs on a throwaway decoder
+        warm = SpeculativeDecoder(model, params, model, params,
+                                  n_spec=args.n_spec, max_seq=args.max_seq,
+                                  temperature=1e-3, rng=jax.random.key(9),
+                                  batched_sync=batched)
+        warm.generate(prompts[0], 4)
+
+        # count the host pulls both paths actually issue: explicit
+        # jax.device_get plus np.asarray on device arrays (the legacy
+        # path's int()/float() syncs are NOT counted, so its number is a
+        # lower bound — wall-clock is the headline metric either way)
+        pulls = 0
+        real_get, real_asarray = jax.device_get, np.asarray
+
+        def counting_get(x):
+            nonlocal pulls
+            pulls += 1
+            return real_get(x)
+
+        def counting_asarray(x, *a, **kw):
+            nonlocal pulls
+            if isinstance(x, jax.Array):
+                pulls += 1
+            return real_asarray(x, *a, **kw)
+
+        gen = rounds = 0
+        t0 = time.perf_counter()
+        jax.device_get, np.asarray = counting_get, counting_asarray
+        try:
+            for p in prompts:
+                d = SpeculativeDecoder(model, params, model, params,
+                                       n_spec=args.n_spec,
+                                       max_seq=args.max_seq,
+                                       temperature=1e-3,
+                                       rng=jax.random.key(args.seed),
+                                       batched_sync=batched)
+                toks = d.generate(p, args.max_new)
+                gen += len(toks)
+                rounds += d.stats.target_passes
+        finally:
+            jax.device_get, np.asarray = real_get, real_asarray
+        wall = time.perf_counter() - t0
+        out[mode] = {
+            "generated_tokens": gen,
+            "wall_s": wall,
+            "tokens_per_s": gen / wall if wall > 0 else 0.0,
+            "verify_rounds": rounds,
+            "host_pulls": pulls,
+            "syncs_per_round": pulls / max(rounds, 1),
+            "acceptance_rate": d.stats.acceptance_rate,
+        }
+    out["tokens_per_s_win"] = (out["batched_sync"]["tokens_per_s"]
+                               / max(out["per_token_sync"]["tokens_per_s"],
+                                     1e-12))
+    out["sync_collapse"] = (out["per_token_sync"]["syncs_per_round"]
+                            / max(out["batched_sync"]["syncs_per_round"],
+                                  1e-12))
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None,
@@ -322,6 +404,13 @@ def main() -> None:
                          "rate x mix sweep (token-identity asserted; "
                          "records the tokens/s win and the "
                          "predicted-vs-measured chunked TPOT error)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="per-token-sync vs batched-sync speculative "
+                         "decoding on identical prompts (records the "
+                         "tokens/s win and measured host syncs per "
+                         "verify round; skips the rate sweep)")
+    ap.add_argument("--n-spec", type=int, default=4,
+                    help="draft window for --speculative")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweep for CI: one rate, two mixes")
     ap.add_argument("--out", default=None, help="write JSON here too")
@@ -345,6 +434,24 @@ def main() -> None:
             sc = sc.replace(opt=dataclasses.replace(
                 sc.opt, paged_kv=True, kv_page_size=page_size(args, sc)))
         return sc
+
+    if args.speculative:
+        sc = build_scenario(args)
+        res = compare_speculative(sc, args)
+        report = {"bench": "serving_bench/speculative_sync",
+                  "scenario": sc.to_dict(), "smoke": args.smoke,
+                  "result": res}
+        text = json.dumps(report, indent=2)
+        print(text)
+        print(f"batched vs per-token sync: "
+              f"{res['tokens_per_s_win']:.2f}x tokens/s, "
+              f"{res['per_token_sync']['syncs_per_round']:.1f} -> "
+              f"{res['batched_sync']['syncs_per_round']:.1f} host pulls "
+              "per verify round", file=sys.stderr)
+        if args.out:
+            Path(args.out).write_text(text)
+            print(f"wrote {args.out}", file=sys.stderr)
+        return
 
     if args.compare_paged:
         sc = scenario_for_run()

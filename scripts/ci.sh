@@ -8,6 +8,13 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== repro-lint: trace/transfer/donation/kernel-bounds invariants =="
+mkdir -p artifacts/lint
+scripts/repro-lint src --kernel-bounds on \
+    --output artifacts/lint/repro_lint.json
+# (text report on stdout; nonzero exit on any unsuppressed finding, and
+#  the JSON artifact records the run either way)
+
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 

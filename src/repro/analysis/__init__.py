@@ -1,0 +1,39 @@
+"""`repro-lint`: static enforcement of the engine's serving invariants.
+
+The repo's headline results rest on properties the platform model takes
+as given — exactly one kernel dispatch and one device->host transfer per
+serving step, in-bounds scalar-prefetched page-table DMA, no jit
+retraces on slot churn, no use of a buffer after it was donated.  Until
+now those were only caught by runtime tests *after* a regression landed.
+This package checks them at review time, over the source:
+
+  * :mod:`.trace_safety` — RPL1xx: tracer-dependent Python control flow
+    inside jitted functions, unstable ``static_argnums``, mutation of
+    captured state under ``jax.jit``, module-import-time device compute.
+  * :mod:`.transfers`   — RPL2xx: implicit device->host syncs
+    (``.item()``, ``int()``/``float()``, ``np.asarray``, iteration /
+    ``__index__``) in functions reachable from the serving hot path —
+    the static counterpart of the ``transfers_d2h == 1`` assertion.
+  * :mod:`.kernel_bounds` — RPL3xx: every ``pallas_call`` BlockSpec
+    index map evaluated concretely over its full grid for the shapes the
+    tests use; blocks must stay in bounds, tile their operands, and the
+    kernel signature must match the spec arity.
+  * :mod:`.donation`    — RPL4xx: use of a buffer after it was passed
+    through ``donate_argnums``.
+
+Run it as ``python -m repro.analysis [paths]`` (or ``scripts/repro-lint``);
+CI fails on any unsuppressed finding.  Audited sites carry
+``# repro-lint: disable=RPLxxx`` pragmas next to a justification.
+"""
+
+from .findings import Finding, RULES, rule
+from .linter import LintResult, lint_paths, lint_sources
+
+__all__ = [
+    "Finding",
+    "LintResult",
+    "RULES",
+    "lint_paths",
+    "lint_sources",
+    "rule",
+]

@@ -1,0 +1,280 @@
+"""Shared AST plumbing for the rule passes.
+
+One :class:`ModuleModel` per source file: import aliases resolved
+(``import jax.numpy as jnp`` / ``from jax import numpy as jnp``), every
+function indexed by ``(class_name, func_name)``, and every ``jax.jit``
+binding collected with its static/donated argument info — module-level
+names, ``self._jit_x`` attributes, and function-local names alike.  The
+rule passes (:mod:`.trace_safety`, :mod:`.transfers`, :mod:`.donation`)
+all read this model instead of re-walking the tree.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+
+def dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` / ``a`` as a dotted string, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def root_name(node: ast.AST) -> str | None:
+    """The leftmost name of an attribute/subscript/call chain."""
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+        node = node.func if isinstance(node, ast.Call) else node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def literal_ints(node: ast.AST) -> tuple[int, ...] | None:
+    """Literal int or tuple/list of ints, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if not (isinstance(el, ast.Constant)
+                    and isinstance(el.value, int)
+                    and not isinstance(el.value, bool)):
+                return None
+            out.append(el.value)
+        return tuple(out)
+    return None
+
+
+def literal_strs(node: ast.AST) -> tuple[str, ...] | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if not (isinstance(el, ast.Constant)
+                    and isinstance(el.value, str)):
+                return None
+            out.append(el.value)
+        return tuple(out)
+    return None
+
+
+@dataclass
+class JitBinding:
+    """One ``jax.jit(target, ...)`` call and where its result is bound."""
+
+    call: ast.Call
+    target: ast.AST  # the wrapped callable expression
+    target_func: str | None  # resolved plain function name, if any
+    target_class: str | None  # class of a self.<method> target
+    bound_name: str | None = None  # module/local variable name
+    bound_attr: str | None = None  # self.<attr> name
+    bound_class: str | None = None  # class owning the bound attr
+    decorator_of: str | None = None  # function the jit decorates
+    static_argnums: tuple[int, ...] = ()
+    static_argnames: tuple[str, ...] = ()
+    static_literal: bool = True  # statics were literal (RPL102 otherwise)
+    donate_argnums: tuple[int, ...] = ()
+    partial_kwargs: tuple[str, ...] = ()  # kwargs pre-bound via partial
+
+
+@dataclass
+class FuncInfo:
+    node: ast.FunctionDef
+    class_name: str | None
+
+
+@dataclass
+class ModuleModel:
+    path: str
+    tree: ast.Module
+    source: str
+    #: alias -> canonical root ("jax", "jax.numpy", "numpy", "functools")
+    aliases: dict[str, str] = field(default_factory=dict)
+    funcs: dict[tuple[str | None, str], FuncInfo] = field(
+        default_factory=dict)
+    jit_bindings: list[JitBinding] = field(default_factory=list)
+
+    # -- alias-aware classification ---------------------------------------
+    def canon(self, name: str | None) -> str | None:
+        """Expand the leading alias of a dotted name to its canonical
+        module path: ``jnp.zeros`` -> ``jax.numpy.zeros``."""
+        if not name:
+            return None
+        head, _, rest = name.partition(".")
+        base = self.aliases.get(head)
+        if base is None:
+            return name
+        return f"{base}.{rest}" if rest else base
+
+    def is_jax_call(self, call: ast.Call) -> bool:
+        c = self.canon(dotted(call.func))
+        return bool(c) and (c == "jax" or c.startswith(("jax.",)))
+
+    def is_numpy_name(self, name: str | None) -> bool:
+        c = self.canon(name)
+        return bool(c) and (c == "numpy" or c.startswith("numpy."))
+
+    def is_jit_expr(self, call: ast.Call) -> bool:
+        return self.canon(dotted(call.func)) == "jax.jit"
+
+    def line(self, node: ast.AST) -> str:
+        lines = self.source.splitlines()
+        ln = getattr(node, "lineno", 0)
+        return lines[ln - 1].strip() if 0 < ln <= len(lines) else ""
+
+
+def _collect_aliases(tree: ast.Module) -> dict[str, str]:
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = \
+                    a.name if a.asname else a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _unwrap_partial(model: ModuleModel, node: ast.AST):
+    """``functools.partial(f, **kw)`` -> (f, kw names); else (node, ())."""
+    if isinstance(node, ast.Call):
+        c = model.canon(dotted(node.func))
+        if c in ("functools.partial", "partial") and node.args:
+            kw = tuple(k.arg for k in node.keywords if k.arg)
+            return node.args[0], kw
+    return node, ()
+
+
+def _jit_binding(model: ModuleModel, call: ast.Call) -> JitBinding:
+    target, partial_kw = _unwrap_partial(model, call.args[0]) \
+        if call.args else (None, ())
+    tfunc = tclass = None
+    d = dotted(target) if target is not None else None
+    if d:
+        parts = d.split(".")
+        if parts[0] == "self" and len(parts) == 2:
+            tfunc, tclass = parts[1], "<self>"
+        elif len(parts) == 1:
+            tfunc = parts[0]
+        else:
+            # module.fn or obj.method: keep the tail as a weak hint
+            tfunc = parts[-1]
+    b = JitBinding(call=call, target=target, target_func=tfunc,
+                   target_class=tclass, partial_kwargs=partial_kw)
+    for kwarg in call.keywords:
+        if kwarg.arg == "static_argnums":
+            nums = literal_ints(kwarg.value)
+            if nums is None:
+                b.static_literal = False
+            else:
+                b.static_argnums = nums
+        elif kwarg.arg == "static_argnames":
+            names = literal_strs(kwarg.value)
+            if names is None:
+                b.static_literal = False
+            else:
+                b.static_argnames = names
+        elif kwarg.arg == "donate_argnums":
+            b.donate_argnums = literal_ints(kwarg.value) or ()
+    return b
+
+
+def build_model(path: str, source: str) -> ModuleModel:
+    tree = ast.parse(source, filename=path)
+    model = ModuleModel(path=path, tree=tree, source=source)
+    model.aliases = _collect_aliases(tree)
+
+    class Indexer(ast.NodeVisitor):
+        def __init__(self):
+            self.class_stack: list[str] = []
+
+        def visit_ClassDef(self, node):
+            self.class_stack.append(node.name)
+            self.generic_visit(node)
+            self.class_stack.pop()
+
+        def _func(self, node):
+            cls = self.class_stack[-1] if self.class_stack else None
+            model.funcs.setdefault((cls, node.name), FuncInfo(node, cls))
+            # jit-as-decorator
+            for dec in node.decorator_list:
+                base, partial_kw = _unwrap_partial(model, dec)
+                is_jit = (isinstance(base, ast.Call)
+                          and model.is_jit_expr(base)) or \
+                    model.canon(dotted(dec)) == "jax.jit"
+                if isinstance(dec, ast.Call) and model.is_jit_expr(dec):
+                    b = _jit_binding(model, dec)
+                    b.call = dec
+                    b.decorator_of = node.name
+                    b.target_func = node.name
+                    b.target_class = cls
+                    model.jit_bindings.append(b)
+                elif is_jit:
+                    b = JitBinding(call=dec if isinstance(dec, ast.Call)
+                                   else ast.Call(func=dec, args=[],
+                                                 keywords=[]),
+                                   target=None, target_func=node.name,
+                                   target_class=cls,
+                                   decorator_of=node.name,
+                                   partial_kwargs=partial_kw)
+                    model.jit_bindings.append(b)
+            self.generic_visit(node)
+
+        visit_FunctionDef = _func
+        visit_AsyncFunctionDef = _func
+
+        def visit_Call(self, node):
+            if model.is_jit_expr(node) and node.args:
+                b = _jit_binding(model, node)
+                if b.target_class == "<self>" and self.class_stack:
+                    b.target_class = self.class_stack[-1]
+                model.jit_bindings.append(b)
+            self.generic_visit(node)
+
+        def visit_Assign(self, node):
+            # where does a jax.jit(...) result land?
+            if isinstance(node.value, ast.Call) \
+                    and model.is_jit_expr(node.value) and node.value.args:
+                b = _jit_binding(model, node.value)
+                if b.target_class == "<self>" and self.class_stack:
+                    b.target_class = self.class_stack[-1]
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        b.bound_name = tgt.id
+                    elif isinstance(tgt, ast.Attribute) \
+                            and isinstance(tgt.value, ast.Name) \
+                            and tgt.value.id == "self":
+                        b.bound_attr = tgt.attr
+                        b.bound_class = (self.class_stack[-1]
+                                         if self.class_stack else None)
+                model.jit_bindings.append(b)
+                # do NOT generic_visit: visit_Call would double-record
+                for tgt in node.targets:
+                    self.visit(tgt)
+                for arg in node.value.args:
+                    self.visit(arg)
+                for kw in node.value.keywords:
+                    self.visit(kw.value)
+                return
+            self.generic_visit(node)
+
+    Indexer().visit(tree)
+    # drop duplicate bindings for the same Call node (decorator double-add)
+    seen: set[int] = set()
+    unique = []
+    for b in model.jit_bindings:
+        if id(b.call) in seen:
+            continue
+        seen.add(id(b.call))
+        unique.append(b)
+    model.jit_bindings = unique
+    return model

@@ -1,0 +1,68 @@
+"""``repro-lint`` command line: ``python -m repro.analysis [paths]``.
+
+Exit status is the CI contract: 0 when clean (suppressed findings do
+not fail the run), 1 on any unsuppressed finding or parse error, 2 on
+usage errors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from .findings import RULES
+from .linter import lint_paths
+from .reporters import render_json, render_text
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="Statically enforce the serving engine's dispatch, "
+                    "transfer, retrace and kernel-bounds invariants.")
+    p.add_argument("paths", nargs="*", default=["src"],
+                   help="files or directories to lint (default: src)")
+    p.add_argument("--format", choices=("text", "json"), default="text")
+    p.add_argument("--output", metavar="FILE",
+                   help="also write a JSON report to FILE")
+    p.add_argument("--show-suppressed", action="store_true",
+                   help="include pragma-suppressed findings in text output")
+    p.add_argument("--kernel-bounds", choices=("auto", "on", "off"),
+                   default="auto",
+                   help="concrete BlockSpec validation of the Pallas "
+                        "kernels (auto: when linting a kernels/ tree)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalog and exit")
+    return p
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for code, r in sorted(RULES.items()):
+            print(f"{code} [{r.family}] {r.summary}")
+            print(f"       fix: {r.hint}")
+        return 0
+    paths = args.paths or ["src"]
+    missing = [p for p in paths if not os.path.exists(p)]
+    if missing:
+        print(f"repro-lint: no such path: {', '.join(missing)}",
+              file=sys.stderr)
+        return 2
+    result = lint_paths(paths, kernel_bounds_mode=args.kernel_bounds)
+    if args.format == "json":
+        print(render_json(result))
+    else:
+        render_text(result, sys.stdout,
+                    show_suppressed=args.show_suppressed)
+    if args.output:
+        os.makedirs(os.path.dirname(args.output) or ".", exist_ok=True)
+        with open(args.output, "w", encoding="utf-8") as fh:
+            fh.write(render_json(result))
+            fh.write("\n")
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

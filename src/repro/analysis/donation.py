@@ -1,0 +1,201 @@
+"""RPL401 — use-after-donate through ``donate_argnums``.
+
+The engine donates its KV cache and sampling state into every jitted
+step (``donate_argnums=(1, 2)`` on decode, ``(1,)`` on prefill/unified)
+so XLA can alias the output buffers onto the inputs.  After such a call
+the donated Python name points at a deleted buffer; any later read
+raises at runtime ("Array has been deleted") — but only on the code
+path that actually executes, which is exactly how the bug escapes
+tests.  This pass tracks it statically, per function:
+
+  1. collect the jitted callables visible to the function — module/local
+     names and ``self._jit_*`` attributes bound from ``jax.jit(...,
+     donate_argnums=...)`` in this module, plus local aliases of those
+     attributes (``fn = self._jit_unified`` — alias sets union their
+     donate specs, conservatively);
+  2. at every call through one of them, mark the argument expressions in
+     donated positions as *dead* (names and ``self.attr`` targets);
+  3. resurrect a name when it is rebound (typically from the call's own
+     results); flag any read of a dead name (RPL401).
+
+Branches are handled conservatively: each ``if``/``else`` arm starts
+from the pre-branch state and the arms' dead sets are unioned, so a
+donate on either arm poisons the join.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .astutil import ModuleModel, dotted
+from .findings import Finding
+
+
+def _donating_bindings(model: ModuleModel) -> dict[str, tuple[int, ...]]:
+    """Callable name -> donated positions.  Keys cover every way the
+    engine spells a jitted callable: bare names and ``self.<attr>``."""
+    out: dict[str, tuple[int, ...]] = {}
+
+    def add(key: str | None, nums: tuple[int, ...]) -> None:
+        if key and nums:
+            out[key] = tuple(sorted(set(out.get(key, ()) + nums)))
+
+    for b in model.jit_bindings:
+        if not b.donate_argnums:
+            continue
+        add(b.bound_name, b.donate_argnums)
+        if b.bound_attr:
+            add(f"self.{b.bound_attr}", b.donate_argnums)
+        add(b.decorator_of, b.donate_argnums)
+    return out
+
+
+class _DonationChecker:
+    def __init__(self, model: ModuleModel, fn: ast.FunctionDef,
+                 donors: dict[str, tuple[int, ...]],
+                 findings: list[Finding]):
+        self.model = model
+        self.fn = fn
+        self.donors = dict(donors)
+        self.findings = findings
+        self.dead: dict[str, int] = {}  # name -> line it was donated on
+
+    # -- helpers -----------------------------------------------------------
+    def _flag(self, node: ast.AST, name: str) -> None:
+        self.findings.append(Finding(
+            "RPL401", self.model.path, node.lineno, node.col_offset,
+            f"'{name}' was donated on line {self.dead[name]} and read "
+            f"again here; donated buffers alias the outputs and are "
+            f"deleted after the call", context=self.model.line(node)))
+
+    def _donate_spec(self, call: ast.Call) -> tuple[int, ...] | None:
+        d = dotted(call.func)
+        return self.donors.get(d) if d else None
+
+    def _kill(self, expr: ast.AST, line: int) -> None:
+        d = dotted(expr)
+        if d is not None:
+            self.dead[d] = line
+
+    def _revive_target(self, target: ast.AST) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._revive_target(el.value if isinstance(el, ast.Starred)
+                                    else el)
+        else:
+            d = dotted(target)
+            if d is not None:
+                self.dead.pop(d, None)
+
+    def _check_reads(self, expr: ast.AST) -> None:
+        """Flag reads of dead names inside an expression (skipping any
+        nested donate-call handling — those are processed separately)."""
+        for node in ast.walk(expr):
+            d = dotted(node) if isinstance(node, (ast.Name, ast.Attribute)) \
+                else None
+            if d is not None and d in self.dead:
+                # only flag the longest dotted match once per site
+                parent_hit = any(p in self.dead and p != d
+                                 for p in _prefixes(d))
+                if not parent_hit:
+                    self._flag(node, d)
+                    del self.dead[d]  # one finding per donate+read pair
+
+    def _process_call(self, call: ast.Call) -> None:
+        spec = self._donate_spec(call)
+        if spec is None:
+            return
+        for pos in spec:
+            if pos < len(call.args):
+                self._kill(call.args[pos], call.lineno)
+
+    # -- statement walk ----------------------------------------------------
+    def _walk(self, body: list[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, ast.Assign):
+                self._check_reads(stmt.value)
+                for call in (n for n in ast.walk(stmt.value)
+                             if isinstance(n, ast.Call)):
+                    self._process_call(call)
+                # alias of a donating callable propagates its spec
+                if len(stmt.targets) == 1:
+                    self._alias(stmt.targets[0], stmt.value)
+                for tgt in stmt.targets:
+                    self._revive_target(tgt)
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                if stmt.value is not None:
+                    self._check_reads(stmt.value)
+                    for call in (n for n in ast.walk(stmt.value)
+                                 if isinstance(n, ast.Call)):
+                        self._process_call(call)
+                if isinstance(stmt, ast.AnnAssign):
+                    self._revive_target(stmt.target)
+            elif isinstance(stmt, ast.If):
+                self._check_reads(stmt.test)
+                before = dict(self.dead)
+                self._walk(stmt.body)
+                after_body = self.dead
+                self.dead = dict(before)
+                self._walk(stmt.orelse)
+                self.dead.update(after_body)  # union of the arms
+            elif isinstance(stmt, (ast.For, ast.While)):
+                if isinstance(stmt, ast.For):
+                    self._check_reads(stmt.iter)
+                    self._revive_target(stmt.target)
+                else:
+                    self._check_reads(stmt.test)
+                self._walk(stmt.body)
+                self._walk(stmt.body)  # donate at loop tail, read at head
+                self._walk(stmt.orelse)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                self._walk(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                self._walk(stmt.body)
+                for h in stmt.handlers:
+                    self._walk(h.body)
+                self._walk(stmt.orelse)
+                self._walk(stmt.finalbody)
+            elif isinstance(stmt, (ast.Return, ast.Expr)):
+                if getattr(stmt, "value", None) is not None:
+                    self._check_reads(stmt.value)
+                    for call in (n for n in ast.walk(stmt.value)
+                                 if isinstance(n, ast.Call)):
+                        self._process_call(call)
+            elif isinstance(stmt, ast.FunctionDef):
+                pass  # nested defs get their own pass
+
+    def _alias(self, target: ast.AST, value: ast.AST) -> None:
+        """``fn = self._jit_unified`` (also tuple form) makes ``fn`` a
+        donating callable; conditional aliases union their specs."""
+        pairs: list[tuple[ast.AST, ast.AST]] = []
+        if isinstance(target, (ast.Tuple, ast.List)) \
+                and isinstance(value, (ast.Tuple, ast.List)) \
+                and len(target.elts) == len(value.elts):
+            pairs = list(zip(target.elts, value.elts))
+        else:
+            pairs = [(target, value)]
+        for tgt, val in pairs:
+            tname, vname = dotted(tgt), dotted(val)
+            if tname and vname and vname in self.donors:
+                prev = self.donors.get(tname, ())
+                self.donors[tname] = tuple(
+                    sorted(set(prev + self.donors[vname])))
+
+    def run(self) -> None:
+        self._walk(self.fn.body)
+
+
+def _prefixes(d: str):
+    parts = d.split(".")
+    for i in range(1, len(parts)):
+        yield ".".join(parts[:i])
+
+
+def check_donation(model: ModuleModel) -> list[Finding]:
+    donors = _donating_bindings(model)
+    if not donors:
+        return []
+    findings: list[Finding] = []
+    for (_cls, _name), info in model.funcs.items():
+        _DonationChecker(model, info.node, donors, findings).run()
+    return findings

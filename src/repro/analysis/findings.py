@@ -1,0 +1,168 @@
+"""Finding records, the rule catalog, and pragma suppression.
+
+Every rule has a stable code (``RPLxyz``: family ``x``, rule ``yz``), a
+one-line description, and a one-line fix hint.  A finding is suppressed
+by a pragma on its own line or on the line directly above::
+
+    toks = np.asarray(sampled)  # repro-lint: disable=RPL203
+
+or for a whole file (anywhere in the file)::
+
+    # repro-lint: disable-file=RPL104
+
+Suppressed findings are kept (reporters count them) but do not fail the
+run — the tier-1 gate is *zero unsuppressed findings over src/*.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Rule:
+    code: str
+    family: str
+    summary: str
+    hint: str
+
+
+#: the rule catalog — codes are stable across PRs (pragmas reference them)
+RULES: dict[str, Rule] = {r.code: r for r in [
+    # -- RPL1xx: trace safety / retrace hazards ------------------------------
+    Rule("RPL101", "trace-safety",
+         "Python control flow on a tracer-valued expression inside a "
+         "jitted function",
+         "use lax.cond/lax.while_loop/jnp.where, or hoist the value to a "
+         "static argument"),
+    Rule("RPL102", "trace-safety",
+         "non-literal static_argnums/static_argnames on jax.jit",
+         "pass literal ints/strings so the static set is stable and "
+         "hashable across calls"),
+    Rule("RPL103", "trace-safety",
+         "jitted function mutates captured state (self attribute, "
+         "global, or closure)",
+         "thread state through arguments and return values; jit replays "
+         "Python side effects only at trace time"),
+    Rule("RPL104", "trace-safety",
+         "device computation at module import time",
+         "build arrays lazily (inside a function) so importing the module "
+         "neither initializes a backend nor bakes in constants"),
+    # -- RPL2xx: host-transfer leaks on the serving hot path -----------------
+    Rule("RPL201", "host-transfer",
+         ".item() on a device value in a serving hot-path function",
+         "keep the value on device, or route the one audited pull through "
+         "jax.device_get"),
+    Rule("RPL202", "host-transfer",
+         "int()/float()/bool() forces a device->host sync in a serving "
+         "hot-path function",
+         "batch the sync: pull once per step via jax.device_get and "
+         "convert on the host copy"),
+    Rule("RPL203", "host-transfer",
+         "np.asarray/np.array on a device value in a serving hot-path "
+         "function",
+         "use jax.device_get at the step's single audited transfer site"),
+    Rule("RPL204", "host-transfer",
+         "device value used as an index / iterated on the host "
+         "(__index__/__iter__ forces a sync)",
+         "pull the value explicitly with jax.device_get before host "
+         "bookkeeping"),
+    # -- RPL3xx: Pallas kernel bounds ----------------------------------------
+    Rule("RPL301", "kernel-bounds",
+         "BlockSpec index map steps out of bounds over the grid",
+         "clamp the index map (or fix the grid) so every block start "
+         "stays inside the operand"),
+    Rule("RPL302", "kernel-bounds",
+         "block shape does not tile the operand shape",
+         "pad the operand (masking the tail) or pick a divisor block "
+         "shape"),
+    Rule("RPL303", "kernel-bounds",
+         "kernel signature does not match the grid spec (scalar-prefetch "
+         "count + inputs + outputs + scratch)",
+         "make the kernel take one ref per scalar-prefetch operand, "
+         "input, output, and scratch shape, in that order"),
+    Rule("RPL304", "kernel-bounds",
+         "inconsistent operand dtypes through a pallas_call",
+         "cast Q/K/V to one dtype before the call; the output dtype "
+         "follows q"),
+    # -- RPL4xx: donation misuse ---------------------------------------------
+    Rule("RPL401", "donation",
+         "buffer read after being passed through donate_argnums",
+         "rebind the name from the call's result (donated inputs alias "
+         "the outputs and must not be read again)"),
+]}
+
+
+def rule(code: str) -> Rule:
+    return RULES[code]
+
+
+@dataclass
+class Finding:
+    code: str
+    path: str
+    line: int
+    col: int
+    message: str
+    suppressed: bool = False
+    context: str = ""  # the offending source line, if available
+
+    @property
+    def family(self) -> str:
+        return RULES[self.code].family
+
+    @property
+    def hint(self) -> str:
+        return RULES[self.code].hint
+
+    def to_dict(self) -> dict:
+        return {"code": self.code, "family": self.family, "path": self.path,
+                "line": self.line, "col": self.col, "message": self.message,
+                "hint": self.hint, "suppressed": self.suppressed,
+                "context": self.context}
+
+
+# ---------------------------------------------------------------------------
+# pragmas
+# ---------------------------------------------------------------------------
+
+_PRAGMA = re.compile(r"#\s*repro-lint:\s*(disable(?:-file)?)\s*=\s*"
+                     r"([A-Za-z0-9_,\s]+)")
+
+
+@dataclass
+class Suppressions:
+    """Per-file pragma index: line -> codes, plus file-wide codes."""
+
+    by_line: dict[int, set[str]] = field(default_factory=dict)
+    file_wide: set[str] = field(default_factory=set)
+
+    @classmethod
+    def scan(cls, source: str) -> "Suppressions":
+        sup = cls()
+        for i, text in enumerate(source.splitlines(), start=1):
+            m = _PRAGMA.search(text)
+            if not m:
+                continue
+            codes = {c.strip().upper() for c in m.group(2).split(",")
+                     if c.strip()}
+            if m.group(1) == "disable-file":
+                sup.file_wide |= codes
+            else:
+                sup.by_line.setdefault(i, set()).update(codes)
+        return sup
+
+    def covers(self, code: str, line: int) -> bool:
+        if code in self.file_wide or "ALL" in self.file_wide:
+            return True
+        for ln in (line, line - 1):
+            codes = self.by_line.get(ln)
+            if codes and (code in codes or "ALL" in codes):
+                return True
+        return False
+
+    def apply(self, findings: list[Finding]) -> None:
+        for f in findings:
+            if self.covers(f.code, f.line):
+                f.suppressed = True

@@ -1,0 +1,137 @@
+"""Run every rule family over a set of sources and fold in suppressions.
+
+``lint_paths`` is the programmatic entry (the CLI and the tier-1 test
+both sit on it): collect ``.py`` files, run the AST passes per file,
+optionally run the concrete kernel-bounds pass (auto-enabled when the
+linted tree contains a ``kernels/`` package), then apply each file's
+``# repro-lint: disable=...`` pragmas.  The gate everywhere is
+:attr:`LintResult.ok` — zero *unsuppressed* findings and zero parse
+errors.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+
+from . import donation, kernel_bounds, trace_safety, transfers
+from .astutil import build_model
+from .findings import Finding, Suppressions
+
+
+@dataclass
+class LintResult:
+    findings: list[Finding] = field(default_factory=list)
+    files: list[str] = field(default_factory=list)
+    errors: list[str] = field(default_factory=list)  # parse/run failures
+    kernel_cases: int = 0
+
+    @property
+    def active(self) -> list[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    @property
+    def suppressed(self) -> list[Finding]:
+        return [f for f in self.findings if f.suppressed]
+
+    @property
+    def ok(self) -> bool:
+        return not self.active and not self.errors
+
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for f in self.active:
+            out[f.code] = out.get(f.code, 0) + 1
+        return out
+
+
+_AST_PASSES = (
+    trace_safety.check_trace_safety,
+    transfers.check_transfers,
+    donation.check_donation,
+)
+
+
+def lint_sources(sources: dict[str, str]) -> LintResult:
+    """AST passes only, over {path: source} — the fixture-corpus entry."""
+    result = LintResult(files=sorted(sources))
+    for path in sorted(sources):
+        source = sources[path]
+        try:
+            model = build_model(path, source)
+        except SyntaxError as exc:
+            result.errors.append(f"{path}: {exc.msg} (line {exc.lineno})")
+            continue
+        per_file: list[Finding] = []
+        for check in _AST_PASSES:
+            per_file.extend(check(model))
+        Suppressions.scan(source).apply(per_file)
+        per_file.sort(key=lambda f: (f.line, f.col, f.code))
+        result.findings.extend(per_file)
+    return result
+
+
+def collect_files(paths: list[str]) -> list[str]:
+    files: list[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, names in os.walk(p):
+                dirs[:] = [d for d in dirs
+                           if d not in ("__pycache__", ".git")]
+                files.extend(os.path.join(root, n) for n in names
+                             if n.endswith(".py"))
+        elif p.endswith(".py"):
+            files.append(p)
+    return sorted(set(files))
+
+
+def _apply_kernel_suppressions(findings: list[Finding],
+                               sources: dict[str, str]) -> None:
+    """Kernel-bounds findings carry runtime paths; match them back to the
+    linted sources (exact, then by basename) so pragmas apply."""
+    by_base = {os.path.basename(p): s for p, s in sources.items()}
+    cache: dict[str, Suppressions] = {}
+    for f in findings:
+        src = sources.get(f.path)
+        if src is None:
+            src = by_base.get(os.path.basename(f.path))
+        if src is None and os.path.isfile(f.path):
+            with open(f.path, encoding="utf-8") as fh:
+                src = fh.read()
+        if src is None:
+            continue
+        key = f.path
+        if key not in cache:
+            cache[key] = Suppressions.scan(src)
+        if cache[key].covers(f.code, f.line):
+            f.suppressed = True
+
+
+def lint_paths(paths: list[str], *,
+               kernel_bounds_mode: str = "auto") -> LintResult:
+    """Full run.  ``kernel_bounds_mode``: 'auto' (run when the tree has a
+    kernels package), 'on', or 'off'."""
+    files = collect_files(paths)
+    sources: dict[str, str] = {}
+    for path in files:
+        with open(path, encoding="utf-8") as fh:
+            sources[path] = fh.read()
+    result = lint_sources(sources)
+
+    run_kb = kernel_bounds_mode == "on" or (
+        kernel_bounds_mode == "auto"
+        and any(os.sep + "kernels" + os.sep in f for f in files))
+    if run_kb:
+        try:
+            cases = kernel_bounds.default_cases()
+        except Exception as exc:  # kernels not importable from here
+            result.errors.append(
+                f"kernel-bounds cases unavailable: "
+                f"{type(exc).__name__}: {exc}")
+            cases = []
+        if cases:
+            kb = kernel_bounds.check_kernel_bounds(cases)
+            _apply_kernel_suppressions(kb, sources)
+            result.findings.extend(kb)
+            result.kernel_cases = len(cases)
+    return result

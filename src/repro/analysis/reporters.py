@@ -1,0 +1,62 @@
+"""Text and JSON reporters for a :class:`~repro.analysis.linter.LintResult`.
+
+Text goes to reviewers (one finding per line, grouped by file, with the
+rule's fix hint); JSON goes to CI artifacts (``artifacts/lint/``) so a
+regression diff shows exactly which invariant broke.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import TextIO
+
+from .findings import RULES
+from .linter import LintResult
+
+
+def render_text(result: LintResult, out: TextIO, *,
+                show_suppressed: bool = False) -> None:
+    by_path: dict[str, list] = {}
+    shown = result.findings if show_suppressed else result.active
+    for f in shown:
+        by_path.setdefault(f.path, []).append(f)
+    for path in sorted(by_path):
+        out.write(f"{path}\n")
+        for f in sorted(by_path[path], key=lambda x: (x.line, x.col)):
+            sup = " [suppressed]" if f.suppressed else ""
+            out.write(f"  {f.line}:{f.col} {f.code}{sup} {f.message}\n")
+            if f.context:
+                out.write(f"      | {f.context}\n")
+            out.write(f"      = hint: {f.hint}\n")
+    for err in result.errors:
+        out.write(f"error: {err}\n")
+    counts = result.counts()
+    n_sup = len(result.suppressed)
+    if counts:
+        parts = ", ".join(f"{c} x{n}" for c, n in sorted(counts.items()))
+        out.write(f"\nrepro-lint: {len(result.active)} finding(s) "
+                  f"[{parts}] in {len(result.files)} file(s)"
+                  f" ({n_sup} suppressed)\n")
+    elif result.errors:
+        out.write(f"\nrepro-lint: {len(result.errors)} error(s)\n")
+    else:
+        kb = (f", {result.kernel_cases} kernel case(s)"
+              if result.kernel_cases else "")
+        out.write(f"repro-lint: clean — {len(result.files)} file(s)"
+                  f"{kb}, {n_sup} suppressed finding(s)\n")
+
+
+def render_json(result: LintResult) -> str:
+    doc = {
+        "tool": "repro-lint",
+        "ok": result.ok,
+        "files": result.files,
+        "kernel_cases": result.kernel_cases,
+        "errors": result.errors,
+        "findings": [f.to_dict() for f in result.findings],
+        "counts": result.counts(),
+        "rules": {code: {"family": r.family, "summary": r.summary,
+                         "hint": r.hint}
+                  for code, r in RULES.items()},
+    }
+    return json.dumps(doc, indent=2, sort_keys=False)

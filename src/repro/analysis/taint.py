@@ -1,0 +1,200 @@
+"""A small forward may-taint analysis over one function body.
+
+Both AST rule families that need value tracking use it:
+
+  * :mod:`.trace_safety` seeds taint from the traced parameters of a
+    jitted function ("is this expression tracer-valued?"),
+  * :mod:`.transfers` seeds taint from device-producing calls and
+    device-resident attributes ("is this expression a device array?").
+
+The analysis is intentionally simple: a set of tainted local names plus
+a set of tainted dotted ``self.x`` prefixes, propagated statement by
+statement in source order, with loop bodies processed twice so taint
+introduced late in a loop reaches its top (a one-step fixpoint — enough
+for the serving code's shapes, and conservative rather than exact).
+Expression taint is structural: an operation on a tainted value is
+tainted, except through *laundering* constructs the caller declares
+(``.shape`` / ``len()`` for trace safety; ``int()`` / ``np.asarray`` /
+``jax.device_get`` for transfers — those produce host values, and the
+transfer pass flags the conversion itself instead).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Callable
+
+from .astutil import ModuleModel, dotted
+
+#: attribute reads that yield static (host) metadata, not array values
+STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "itemsize",
+                          "sharding", "weak_type"})
+
+#: builtins whose result is host-static regardless of argument taint
+STATIC_CALLS = frozenset({"len", "isinstance", "type", "hasattr", "repr",
+                          "id", "callable"})
+
+
+class TaintEnv:
+    def __init__(self, names: set[str] | None = None,
+                 attrs: set[str] | None = None):
+        self.names: set[str] = set(names or ())
+        self.attrs: set[str] = set(attrs or ())  # dotted "self.cache" style
+
+    def copy(self) -> "TaintEnv":
+        return TaintEnv(self.names, self.attrs)
+
+
+class TaintWalker:
+    """Walks one function body; subclasses hook ``visit_statement`` to
+    flag patterns against the current environment."""
+
+    def __init__(self, model: ModuleModel, fn: ast.FunctionDef, *,
+                 seeds: set[str] | None = None,
+                 tainted_attrs: set[str] | None = None,
+                 device_call: Callable[[ast.Call], bool] | None = None,
+                 launder_call: Callable[[ast.Call], bool] | None = None):
+        self.model = model
+        self.fn = fn
+        self.env = TaintEnv(seeds, tainted_attrs)
+        self._device_call = device_call or (lambda c: False)
+        self._launder_call = launder_call or (lambda c: False)
+
+    # -- expression taint --------------------------------------------------
+    def tainted(self, e: ast.AST) -> bool:
+        if isinstance(e, ast.Name):
+            return e.id in self.env.names
+        if isinstance(e, ast.Attribute):
+            if e.attr in STATIC_ATTRS:
+                return False
+            d = dotted(e)
+            if d and any(d == a or d.startswith(a + ".")
+                         for a in self.env.attrs):
+                return True
+            return self.tainted(e.value)
+        if isinstance(e, ast.Subscript):
+            return self.tainted(e.value)
+        if isinstance(e, ast.Call):
+            f = e.func
+            if isinstance(f, ast.Name) and f.id in STATIC_CALLS:
+                return False
+            if self._launder_call(e):
+                return False
+            if self._device_call(e):
+                return True
+            # a method on a tainted object stays tainted (.astype, .sum)
+            if isinstance(f, ast.Attribute) and self.tainted(f.value):
+                return True
+            return any(self.tainted(a) for a in e.args) or \
+                any(self.tainted(k.value) for k in e.keywords)
+        if isinstance(e, (ast.BinOp,)):
+            return self.tainted(e.left) or self.tainted(e.right)
+        if isinstance(e, ast.UnaryOp):
+            return self.tainted(e.operand)
+        if isinstance(e, ast.BoolOp):
+            return any(self.tainted(v) for v in e.values)
+        if isinstance(e, ast.Compare):
+            return self.tainted(e.left) or \
+                any(self.tainted(c) for c in e.comparators)
+        if isinstance(e, ast.IfExp):
+            return self.tainted(e.body) or self.tainted(e.orelse)
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.tainted(v) for v in e.elts)
+        if isinstance(e, ast.Starred):
+            return self.tainted(e.value)
+        if isinstance(e, ast.NamedExpr):
+            return self.tainted(e.value)
+        return False
+
+    # -- statement propagation ---------------------------------------------
+    def _bind(self, target: ast.AST, value_tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if value_tainted:
+                self.env.names.add(target.id)
+            else:
+                self.env.names.discard(target.id)
+        elif isinstance(target, ast.Attribute):
+            d = dotted(target)
+            if d:
+                if value_tainted:
+                    self.env.attrs.add(d)
+                else:
+                    self.env.attrs.discard(d)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._bind(el.value if isinstance(el, ast.Starred) else el,
+                           value_tainted)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, value_tainted)
+        # Subscript targets mutate in place: container keeps its taint
+
+    def _assign(self, node: ast.Assign | ast.AnnAssign | ast.AugAssign
+                | ast.NamedExpr) -> None:
+        if isinstance(node, ast.Assign):
+            t = self.tainted(node.value)
+            # tuple-unpacking a call: every element shares the call taint
+            if len(node.targets) == 1 \
+                    and isinstance(node.targets[0], (ast.Tuple, ast.List)) \
+                    and isinstance(node.value, (ast.Call, ast.Name,
+                                                ast.Attribute)):
+                self._bind(node.targets[0], t)
+            elif len(node.targets) == 1 \
+                    and isinstance(node.targets[0], (ast.Tuple, ast.List)) \
+                    and isinstance(node.value, (ast.Tuple, ast.List)) \
+                    and len(node.targets[0].elts) == len(node.value.elts):
+                for tg, v in zip(node.targets[0].elts, node.value.elts):
+                    self._bind(tg, self.tainted(v))
+            else:
+                for tg in node.targets:
+                    self._bind(tg, t)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            self._bind(node.target, self.tainted(node.value))
+        elif isinstance(node, ast.AugAssign):
+            if self.tainted(node.value):
+                self._bind(node.target, True)
+        elif isinstance(node, ast.NamedExpr):
+            self._bind(node.target, self.tainted(node.value))
+
+    # hook: called for every statement *before* its bindings take effect
+    def visit_statement(self, stmt: ast.stmt) -> None:  # pragma: no cover
+        pass
+
+    def _walk_body(self, body: list[ast.stmt]) -> None:
+        for stmt in body:
+            self.visit_statement(stmt)
+            for walrus in (n for n in ast.walk(stmt)
+                           if isinstance(n, ast.NamedExpr)):
+                self._assign(walrus)
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                self._assign(stmt)
+            elif isinstance(stmt, ast.For):
+                # the loop variable inherits the iterable's taint
+                self._bind(stmt.target, self.tainted(stmt.iter))
+                self._walk_body(stmt.body)
+                self._walk_body(stmt.body)  # one-step fixpoint
+                self._walk_body(stmt.orelse)
+            elif isinstance(stmt, ast.While):
+                self._walk_body(stmt.body)
+                self._walk_body(stmt.body)
+                self._walk_body(stmt.orelse)
+            elif isinstance(stmt, ast.If):
+                self._walk_body(stmt.body)
+                self._walk_body(stmt.orelse)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    if item.optional_vars is not None:
+                        self._bind(item.optional_vars,
+                                   self.tainted(item.context_expr))
+                self._walk_body(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                self._walk_body(stmt.body)
+                for h in stmt.handlers:
+                    self._walk_body(h.body)
+                self._walk_body(stmt.orelse)
+                self._walk_body(stmt.finalbody)
+            elif isinstance(stmt, ast.FunctionDef):
+                # nested defs run in the same device context (closures)
+                self._walk_body(stmt.body)
+
+    def run(self) -> None:
+        self._walk_body(self.fn.body)

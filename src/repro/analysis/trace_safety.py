@@ -1,0 +1,268 @@
+"""RPL1xx — trace-safety / retrace hazards.
+
+The engine's no-retrace-on-slot-churn invariant (PR 1) survives only if
+nothing inside a jitted function branches on tracer values, the static
+argument sets are stable, and jitted code never mutates captured state.
+This pass finds the hazards statically:
+
+  * **RPL101** — Python ``if``/``while``/``assert``/``for`` (and ternary
+    / comprehension guards) on a tracer-valued expression inside a
+    function that is jitted anywhere in the module.  Tracer values are
+    the function's non-static parameters and anything computed from
+    them or from ``jnp``/``jax`` calls; ``.shape``/``.ndim``/``.dtype``
+    and ``len()`` are static and do not propagate taint.
+  * **RPL102** — ``static_argnums``/``static_argnames`` passed as
+    non-literal expressions (an unstable or unhashable static set is a
+    silent retrace-per-call).
+  * **RPL103** — a jitted function assigning ``self.x``/``global``/
+    ``nonlocal`` or mutating a captured container: the side effect
+    happens at trace time only and silently disappears on cache hits.
+  * **RPL104** — ``jnp``/``jax`` computation at module import time:
+    initializes a backend on import and bakes device constants into the
+    module (the classic "imports are slow and arrays are stale" bug).
+
+Static-by-convention: keyword-only parameters and parameters pre-bound
+through ``functools.partial`` inside the ``jax.jit(...)`` call are
+treated as static (that is exactly how the engine passes its packed
+geometry), as are ``static_argnums``/``static_argnames`` entries.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .astutil import JitBinding, ModuleModel, dotted, root_name
+from .findings import Finding
+from .taint import TaintWalker
+
+#: module-level jax attributes that are safe at import time (registration
+#: and metadata, not device compute)
+_IMPORT_TIME_OK = (
+    "jax.tree_util.register_dataclass",
+    "jax.tree_util.register_pytree_node",
+    "jax.tree_util.register_pytree_node_class",
+    "jax.config",
+    "jax.jit",
+    "jax.custom_vjp",
+    "jax.custom_jvp",
+    "jax.vmap",
+    "jax.grad",
+    "jax.named_call",
+    "jax.numpy.dtype",
+    "jax.numpy.finfo",
+    "jax.numpy.iinfo",
+)
+
+_MUTATORS = frozenset({"append", "extend", "insert", "update", "setdefault",
+                       "pop", "popitem", "remove", "clear", "add",
+                       "discard", "appendleft", "popleft"})
+
+
+def _static_iteration(it: ast.AST) -> bool:
+    """Iterating a pytree container has a static trip count even when the
+    *values* are tracers: ``for k, leaf in cache.layers.items()`` is fine;
+    ``for x in tracer_array`` is the hazard."""
+    if isinstance(it, ast.Call):
+        f = it.func
+        if isinstance(f, ast.Attribute) and f.attr in ("items", "keys",
+                                                       "values"):
+            return True
+        if isinstance(f, ast.Name) and f.id in ("enumerate", "zip",
+                                                "range", "reversed",
+                                                "sorted"):
+            return True
+    return False
+
+
+def _jitted_functions(model: ModuleModel):
+    """Yield (FuncInfo, binding) for every function jitted in this
+    module — by decorator or by being wrapped in a ``jax.jit(...)``
+    call (optionally through ``functools.partial``)."""
+    for b in model.jit_bindings:
+        if not b.target_func:
+            continue
+        cls = b.target_class if b.target_class not in ("<self>",) else None
+        info = model.funcs.get((cls, b.target_func)) \
+            or model.funcs.get((None, b.target_func))
+        if info is not None:
+            yield info, b
+
+
+def _static_param_names(fn: ast.FunctionDef, b: JitBinding) -> set[str]:
+    args = fn.args
+    positional = [a.arg for a in args.posonlyargs + args.args]
+    bound_method = b.target is not None and \
+        (dotted(b.target) or "").startswith("self.")
+    if positional and positional[0] == "self" and not bound_method:
+        pass  # decorator-jitted method: self is arg 0 (itself a hazard,
+        # but not this rule's)
+    offset = 1 if (positional and positional[0] == "self"
+                   and bound_method) else 0
+    static = {positional[i + offset]
+              for i in b.static_argnums if i + offset < len(positional)}
+    static |= set(b.static_argnames)
+    static |= set(b.partial_kwargs)
+    static |= {a.arg for a in args.kwonlyargs}  # static by convention
+    return static
+
+
+def _traced_params(fn: ast.FunctionDef, b: JitBinding) -> set[str]:
+    args = fn.args
+    names = [a.arg for a in args.posonlyargs + args.args]
+    if names and names[0] == "self":
+        names = names[1:]
+    return set(names) - _static_param_names(fn, b)
+
+
+class _TraceWalker(TaintWalker):
+    """Flags tracer-dependent control flow (RPL101) and captured-state
+    mutation (RPL103) while propagating taint."""
+
+    def __init__(self, model, fn, binding, findings: list[Finding]):
+        super().__init__(
+            model, fn, seeds=_traced_params(fn, binding),
+            device_call=model.is_jax_call)
+        self.findings = findings
+        self._locals = {a.arg for a in fn.args.posonlyargs + fn.args.args
+                        + fn.args.kwonlyargs}
+
+    def _flag(self, code: str, node: ast.AST, msg: str) -> None:
+        self.findings.append(Finding(
+            code=code, path=self.model.path,
+            line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0), message=msg,
+            context=self.model.line(node)))
+
+    def _check_test(self, test: ast.AST, what: str) -> None:
+        if self.tainted(test):
+            self._flag("RPL101", test,
+                       f"{what} on a tracer-valued expression inside "
+                       f"jitted function '{self.fn.name}'")
+
+    def visit_statement(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.If):
+            self._check_test(stmt.test, "if")
+        elif isinstance(stmt, ast.While):
+            self._check_test(stmt.test, "while")
+        elif isinstance(stmt, ast.Assert):
+            self._check_test(stmt.test, "assert")
+        elif isinstance(stmt, ast.For) and self.tainted(stmt.iter) \
+                and not _static_iteration(stmt.iter):
+            self._flag("RPL101", stmt.iter,
+                       f"for-loop over a tracer-valued iterable inside "
+                       f"jitted function '{self.fn.name}'")
+        elif isinstance(stmt, (ast.Global, ast.Nonlocal)):
+            self._flag("RPL103", stmt,
+                       f"jitted function '{self.fn.name}' rebinds "
+                       f"{'/'.join(stmt.names)} via "
+                       f"{type(stmt).__name__.lower()}; the write happens "
+                       "at trace time only")
+        # ternaries / comprehension guards anywhere in the statement
+        for sub in ast.walk(stmt):
+            if isinstance(sub, ast.IfExp):
+                self._check_test(sub.test, "conditional expression")
+            elif isinstance(sub, ast.comprehension):
+                for cond in sub.ifs:
+                    self._check_test(cond, "comprehension guard")
+        # captured-state mutation (RPL103)
+        if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                else [stmt.target]
+            for tgt in targets:
+                self._check_captured_write(tgt)
+        for sub in ast.walk(stmt):
+            if isinstance(sub, ast.Call) \
+                    and isinstance(sub.func, ast.Attribute) \
+                    and sub.func.attr in _MUTATORS:
+                root = root_name(sub.func.value)
+                if root is not None and root not in self._locals \
+                        and not self.env.names.issuperset({root}) is None:
+                    if root == "self" or root not in self._locals:
+                        self._flag(
+                            "RPL103", sub,
+                            f"jitted function '{self.fn.name}' mutates "
+                            f"captured '{dotted(sub.func.value) or root}."
+                            f"{sub.func.attr}()'; the effect exists only "
+                            "at trace time")
+
+    def _check_captured_write(self, tgt: ast.AST) -> None:
+        if isinstance(tgt, ast.Attribute):
+            d = dotted(tgt)
+            if d and d.startswith("self."):
+                self._flag("RPL103", tgt,
+                           f"jitted function '{self.fn.name}' assigns "
+                           f"'{d}'; jit replays the write at trace time "
+                           "only")
+        elif isinstance(tgt, ast.Subscript):
+            root = root_name(tgt.value)
+            if root is not None and root not in self._locals:
+                self._flag("RPL103", tgt,
+                           f"jitted function '{self.fn.name}' writes "
+                           f"into captured container "
+                           f"'{dotted(tgt.value) or root}'")
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for el in tgt.elts:
+                self._check_captured_write(el)
+
+    def _walk_body(self, body):  # track locals as they appear
+        for stmt in body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Assign):
+                    for t in sub.targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                self._locals.add(n.id)
+                elif isinstance(sub, (ast.For,)):
+                    for n in ast.walk(sub.target):
+                        if isinstance(n, ast.Name):
+                            self._locals.add(n.id)
+        super()._walk_body(body)
+
+
+def check_trace_safety(model: ModuleModel) -> list[Finding]:
+    findings: list[Finding] = []
+
+    # RPL102: non-literal static argument sets
+    for b in model.jit_bindings:
+        if not b.static_literal:
+            findings.append(Finding(
+                "RPL102", model.path, getattr(b.call, "lineno", 0),
+                getattr(b.call, "col_offset", 0),
+                "static_argnums/static_argnames must be literal ints/"
+                "strings; a computed static set retraces (or fails to "
+                "hash) per call", context=model.line(b.call)))
+
+    # RPL101 + RPL103: walk every jitted function once per binding site
+    seen: set[tuple[int, int]] = set()
+    for info, b in _jitted_functions(model):
+        key = (id(info.node), 0)
+        if key in seen:
+            continue
+        seen.add(key)
+        walker = _TraceWalker(model, info.node, b, findings)
+        walker.run()
+
+    # RPL104: module-import-time device compute (module and class bodies)
+    def scan_toplevel(body):
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(stmt, ast.ClassDef):
+                scan_toplevel(stmt.body)
+                continue
+            for sub in ast.walk(stmt):
+                if isinstance(sub, (ast.FunctionDef, ast.Lambda)):
+                    break
+                if isinstance(sub, ast.Call):
+                    c = model.canon(dotted(sub.func))
+                    if c and (c == "jax" or c.startswith("jax.")) \
+                            and not c.startswith(_IMPORT_TIME_OK):
+                        findings.append(Finding(
+                            "RPL104", model.path, sub.lineno,
+                            sub.col_offset,
+                            f"'{dotted(sub.func)}' runs at module import "
+                            "time; device compute belongs inside a "
+                            "function", context=model.line(sub)))
+
+    scan_toplevel(model.tree.body)
+    return findings

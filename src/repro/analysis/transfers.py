@@ -1,0 +1,267 @@
+"""RPL2xx — implicit device->host transfer leaks on the serving hot path.
+
+The unified step's performance contract (PR 5) is *one* jitted dispatch
+and *one* device->host transfer per step; the speculative decoder's is
+one combined pull per draft window.  Any stray ``.item()``, ``int()``,
+``np.asarray`` or host-side indexing of a device value inside those
+loops silently serializes the pipeline.  This pass walks every function
+reachable from the declared hot-path entry points and flags host
+conversions applied to device-tainted values:
+
+  * **RPL201** — ``x.item()``
+  * **RPL202** — ``int(x)`` / ``float(x)`` / ``bool(x)``
+  * **RPL203** — ``np.asarray(x)`` / ``np.array(x)``
+  * **RPL204** — a device value used as a subscript index, iterated, or
+    unpacked on the host (all force ``__index__``/``__iter__`` syncs)
+
+``jax.device_get`` / ``jax.device_put`` are the sanctioned explicit
+transfer APIs and are never flagged — the audited once-per-step pull is
+expected to go through them (with a pragma documenting the audit where
+the engine keeps a legacy path).
+
+Device taint sources, per function: ``jnp.*``/``jax.*`` call results
+(minus ``device_get``), calls through any ``self._jit_*``-bound jitted
+callable recorded in the module model, parameters whose names suggest
+device state (``logits``, ``cache``, ``probs``...), and ``self.<attr>``
+attributes assigned a device value anywhere in the class.  Reachability
+is an intra-module call graph seeded from the entry points below —
+``self.method()`` edges stay within the class, bare-name calls within
+the module.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+
+from .astutil import ModuleModel, dotted
+from .findings import Finding
+from .taint import TaintWalker
+
+#: (class, method) serving hot-path roots; None class = module function
+ENTRY_POINTS: tuple[tuple[str, str], ...] = (
+    ("ServeEngine", "step"),
+    ("ServeEngine", "run"),
+    ("ServeEngine", "serve"),
+    ("SpeculativeDecoder", "generate"),
+    ("SpeculativeDecoder", "decode_round"),
+    ("SpeculativeDecoder", "prefill"),
+)
+
+#: parameter names that carry device arrays into hot-path helpers
+_DEVICE_PARAM_HINTS = frozenset({
+    "logits", "logits_all", "cache", "kv", "probs", "p", "q", "k", "v",
+    "sampled", "tokens_dev", "hidden", "x", "keys", "key", "params",
+})
+
+#: jax APIs whose *result* is host data (explicit, sanctioned transfers)
+_SANCTIONED = ("jax.device_get", "jax.device_put", "jax.block_until_ready")
+
+
+def _is_np_convert(model: ModuleModel, call: ast.Call) -> bool:
+    c = model.canon(dotted(call.func))
+    return c in ("numpy.asarray", "numpy.array", "numpy.float32",
+                 "numpy.float64", "numpy.int32", "numpy.int64")
+
+
+def _is_sanctioned(model: ModuleModel, call: ast.Call) -> bool:
+    c = model.canon(dotted(call.func))
+    return bool(c) and c.startswith(_SANCTIONED)
+
+
+@dataclass
+class _ClassSummary:
+    """Per-class facts shared by every method walk."""
+
+    device_attrs: set[str]  # dotted self.x assigned device values
+    jit_attrs: set[str]  # self.<attr> holding jitted callables
+    device_methods: set[str]  # methods returning device values
+
+
+def _device_value_expr(model: ModuleModel, summary: _ClassSummary,
+                       e: ast.AST) -> bool:
+    """Syntactic device-ness of an initializer (no env needed)."""
+    if isinstance(e, ast.Call):
+        if _is_sanctioned(model, e) or _is_np_convert(model, e):
+            return False
+        if model.is_jax_call(e):
+            return True
+        f = dotted(e.func)
+        if f and f.startswith("self.") and f[5:] in summary.jit_attrs:
+            return True
+        return False
+    if isinstance(e, (ast.BinOp,)):
+        return _device_value_expr(model, summary, e.left) or \
+            _device_value_expr(model, summary, e.right)
+    if isinstance(e, ast.Subscript):
+        return _device_value_expr(model, summary, e.value)
+    if isinstance(e, ast.Attribute):
+        d = dotted(e)
+        return bool(d) and d in {f"self.{a}" for a in summary.device_attrs}
+    return False
+
+
+def _summarize_class(model: ModuleModel, cls: str) -> _ClassSummary:
+    s = _ClassSummary(device_attrs=set(), jit_attrs=set(),
+                      device_methods=set())
+    for b in model.jit_bindings:
+        if b.bound_attr and (b.bound_class == cls or b.bound_class is None):
+            s.jit_attrs.add(b.bound_attr)
+    methods = {name: info for (c, name), info in model.funcs.items()
+               if c == cls}
+    # two passes so attrs fed by device-returning methods are caught
+    for _ in range(2):
+        for info in methods.values():
+            for node in ast.walk(info.node):
+                if isinstance(node, ast.Assign):
+                    if _device_value_expr(model, s, node.value):
+                        for tgt in node.targets:
+                            d = dotted(tgt)
+                            if d and d.startswith("self."):
+                                s.device_attrs.add(d[5:])
+                elif isinstance(node, ast.Return) and node.value is not None:
+                    vals = node.value.elts \
+                        if isinstance(node.value, ast.Tuple) \
+                        else [node.value]
+                    if any(_device_value_expr(model, s, v) for v in vals):
+                        s.device_methods.add(info.node.name)
+    return s
+
+
+def _callees(model: ModuleModel, cls: str | None,
+             fn: ast.FunctionDef) -> list[tuple[str | None, str]]:
+    out = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func)
+        if not d:
+            continue
+        if d.startswith("self.") and "." not in d[5:]:
+            if (cls, d[5:]) in model.funcs:
+                out.append((cls, d[5:]))
+        elif "." not in d and (None, d) in model.funcs:
+            out.append((None, d))
+    return out
+
+
+class _TransferWalker(TaintWalker):
+    def __init__(self, model, fn, cls, summary: _ClassSummary,
+                 findings: list[Finding]):
+        names = [a.arg for a in fn.args.posonlyargs + fn.args.args
+                 + fn.args.kwonlyargs]
+        seeds = {n for n in names if n in _DEVICE_PARAM_HINTS}
+        super().__init__(
+            model, fn, seeds=seeds,
+            tainted_attrs={f"self.{a}" for a in summary.device_attrs},
+            device_call=lambda c: self._is_device_call(c),
+            launder_call=lambda c: self._is_host_convert(c))
+        self.cls = cls
+        self.summary = summary
+        self.findings = findings
+
+    # -- classification ----------------------------------------------------
+    def _is_device_call(self, call: ast.Call) -> bool:
+        if _is_sanctioned(self.model, call):
+            return False
+        if self.model.is_jax_call(call):
+            return True
+        d = dotted(call.func)
+        if d and d.startswith("self."):
+            tail = d[5:]
+            if tail in self.summary.jit_attrs \
+                    or tail in self.summary.device_methods:
+                return True
+        return False
+
+    def _is_host_convert(self, call: ast.Call) -> bool:
+        """True for conversions whose *result* is host data; the flagging
+        of the conversion itself happens in visit_statement."""
+        f = call.func
+        if isinstance(f, ast.Name) and f.id in ("int", "float", "bool"):
+            return True
+        if isinstance(f, ast.Attribute) and f.attr in ("item", "tolist"):
+            return True
+        if _is_np_convert(self.model, call) \
+                or _is_sanctioned(self.model, call):
+            return True
+        return False
+
+    # -- flagging ----------------------------------------------------------
+    def _flag(self, code: str, node: ast.AST, msg: str) -> None:
+        self.findings.append(Finding(
+            code=code, path=self.model.path, line=node.lineno,
+            col=node.col_offset, message=msg,
+            context=self.model.line(node)))
+
+    def visit_statement(self, stmt: ast.stmt) -> None:
+        where = f"hot-path function '{self.fn.name}'"
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call):
+                f = node.func
+                arg0 = node.args[0] if node.args else None
+                if isinstance(f, ast.Attribute) \
+                        and f.attr in ("item", "tolist") \
+                        and self.tainted(f.value):
+                    self._flag("RPL201", node,
+                               f".{f.attr}() pulls a device value to the "
+                               f"host inside {where}")
+                elif isinstance(f, ast.Name) \
+                        and f.id in ("int", "float", "bool") \
+                        and arg0 is not None and self.tainted(arg0):
+                    self._flag("RPL202", node,
+                               f"{f.id}() forces a device->host sync "
+                               f"inside {where}")
+                elif _is_np_convert(self.model, node) \
+                        and arg0 is not None and self.tainted(arg0):
+                    self._flag("RPL203", node,
+                               f"{dotted(f)}() copies a device value to "
+                               f"the host inside {where}")
+            elif isinstance(node, ast.Subscript):
+                # device value used as an index: container[dev] syncs
+                idx = node.slice
+                elts = idx.elts if isinstance(idx, ast.Tuple) else [idx]
+                for el in elts:
+                    if isinstance(el, ast.Slice):
+                        continue
+                    if self.tainted(el) and not self.tainted(node.value):
+                        self._flag("RPL204", node,
+                                   "device value used as a host subscript "
+                                   f"index inside {where} (__index__ "
+                                   "forces a sync)")
+        if isinstance(stmt, ast.For) and self.tainted(stmt.iter):
+            self._flag("RPL204", stmt.iter,
+                       f"host iteration over a device array inside {where} "
+                       "(each element is a separate sync)")
+
+
+def check_transfers(model: ModuleModel) -> list[Finding]:
+    findings: list[Finding] = []
+    # seed reachability from entry points present in this module
+    roots = [(cls, name) for cls, name in ENTRY_POINTS
+             if (cls, name) in model.funcs]
+    if not roots:
+        return findings
+    summaries: dict[str | None, _ClassSummary] = {}
+    visited: set[tuple[str | None, str]] = set()
+    work = list(roots)
+    while work:
+        key = work.pop()
+        if key in visited:
+            continue
+        visited.add(key)
+        cls, name = key
+        info = model.funcs[key]
+        if cls not in summaries:
+            summaries[cls] = _summarize_class(model, cls) if cls else \
+                _ClassSummary(set(), set(), set())
+        walker = _TransferWalker(model, info.node, cls, summaries[cls],
+                                 findings)
+        walker.run()
+        work.extend(k for k in _callees(model, cls, info.node)
+                    if k not in visited)
+    # findings inside the same node can repeat across walks; dedupe
+    uniq: dict[tuple, Finding] = {}
+    for f in findings:
+        uniq.setdefault((f.code, f.line, f.col, f.message), f)
+    return list(uniq.values())

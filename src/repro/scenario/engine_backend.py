@@ -46,6 +46,10 @@ import time
 from .report import Report
 from .scenario import Scenario
 
+#: Scenario modes this backend can lower to a live run.  Refusal paths
+#: quote this list so an unsupported-mode Report is self-explanatory.
+LOWERABLE_MODES = ("monolithic", "chunked", "speculative")
+
 #: engine-lowering defaults, overridable via ``run(..., engine_kw=...)``
 DEFAULTS = dict(max_slots=8, max_seq=256, prefill_rows=2, max_prompt=64,
                 max_new=32, n_requests=None, seed=0, temperature=0.0,
@@ -95,10 +99,14 @@ def evaluate(sc: Scenario, **engine_kw) -> Report:
     """Scenario -> Report (measured on the real engine)."""
     kw = dict(DEFAULTS)
     kw.update(engine_kw)
-    if sc.mode == "disaggregated":
-        return Report(scenario=sc, backend="engine", status="unsupported",
-                      error="disaggregated serving needs multiple hosts; "
-                            "no single-engine lowering exists")
+    if sc.mode not in LOWERABLE_MODES:
+        return Report(
+            scenario=sc, backend="engine", status="unsupported",
+            error=f"scenario mode {sc.mode!r} has no engine lowering: "
+                  "disaggregated serving needs a prefill host and a "
+                  "decode host, and a single-host engine cannot measure "
+                  "the KV handoff it exists to study; lowerable modes "
+                  f"are {', '.join(LOWERABLE_MODES)}")
     try:
         spec, model, params = lower_model(sc.model)
     except (ValueError, TypeError) as e:
@@ -217,10 +225,16 @@ def _run_speculative(sc: Scenario, spec, model, params, kw: dict) -> Report:
 
     if sc.opt.paged_kv or kw["cache_layout"] == "paged" or kw["unified"]:
         # don't silently measure a dense run under a paged label
-        return Report(scenario=sc, backend="engine", status="unsupported",
-                      error="the speculative decoder runs draft/target on "
-                            "dense caches; paged_kv / unified has no "
-                            "speculative lowering yet")
+        asked = "unified" if kw["unified"] else "paged_kv"
+        return Report(
+            scenario=sc, backend="engine", status="unsupported",
+            error=f"mode 'speculative' with {asked} has no engine "
+                  "lowering: the speculative decoder runs draft/target "
+                  "on dense caches (ROADMAP: pack draft verification "
+                  "into the unified ragged step); lowerable today are "
+                  f"modes {', '.join(LOWERABLE_MODES)} — 'speculative' "
+                  "only with the dense layout, 'monolithic'/'chunked' "
+                  "with dense, paged or unified")
 
     d_spec, d_model, d_params = lower_model(sc.speculative.draft)
     if d_spec.vocab != spec.vocab:

@@ -78,6 +78,7 @@ and test.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import itertools
@@ -147,6 +148,15 @@ class EngineConfig:
     #: K/V written directly into their pages (requires cache_layout=
     #: "paged" and an attention-only stack)
     unified: bool = False
+    #: runtime enforcement of the hot-path invariants: every engine step
+    #: runs under ``jax.transfer_guard("disallow")`` (any *implicit*
+    #: host<->device transfer — e.g. a numpy array slipped straight into
+    #: a jitted call — raises; the engine's own uploads/pulls are explicit
+    #: ``jax.device_put``/``jax.device_get`` and stay legal) and the jit
+    #: caches of the steady-state dispatches are asserted flat across slot
+    #: churn (a growing cache is a retrace).  Greedy outputs are identical
+    #: with the guards on or off — this mode only *observes*.
+    debug_guards: bool = False
 
 
 @dataclass
@@ -370,6 +380,52 @@ class ServeEngine:
                               n_decode=0),
             donate_argnums=(1,))
 
+        # debug-guards bookkeeping: last observed jit cache size of each
+        # steady-state dispatch (``_jit_prefill`` legitimately traces once
+        # per chunk width and is excluded)
+        self.debug_guards = config.debug_guards
+        self._trace_sizes: dict[str, int] = {}
+
+    # -- debug guards ---------------------------------------------------------
+    def _step_guard(self):
+        """``transfer_guard("disallow")`` for the whole step when
+        ``debug_guards`` is on: implicit transfers (a numpy array passed
+        straight into a jitted call) raise; the engine's explicit
+        ``device_put``/``device_get``/``jnp.asarray`` traffic is exempt."""
+        if self.debug_guards:
+            return jax.transfer_guard("disallow")
+        return contextlib.nullcontext()
+
+    def _assert_no_retrace(self) -> None:
+        """The steady-state dispatches each compile exactly one program
+        (their shapes depend only on the engine geometry); a jit cache
+        that grows after its first trace is a retrace regression.  Uses
+        ``_cache_size`` where this jax version exposes it."""
+        checks = (("_jit_decode", self._jit_decode),
+                  ("_jit_unified", self._jit_unified),
+                  ("_jit_unified_decode", self._jit_unified_decode))
+        # repro-lint: disable=RPL204 — iterates jit wrappers, not arrays
+        for name, fn in checks:
+            size_of = getattr(fn, "_cache_size", None)
+            if size_of is None:  # pragma: no cover - older/newer jax
+                continue
+            size = size_of()
+            prev = self._trace_sizes.get(name, 0)
+            if prev > 0 and size > prev:
+                raise AssertionError(
+                    f"debug_guards: {name} retraced (jit cache grew "
+                    f"{prev} -> {size}); its shapes depend only on the "
+                    "engine geometry, so slot churn must never retrace")
+            # repro-lint: disable=RPL204 — cache sizes are host ints
+            self._trace_sizes[name] = max(prev, size)
+
+    @staticmethod
+    def _dev_i32(val) -> jax.Array:
+        """Python scalar -> device int32 via *explicit* device_put:
+        ``jnp.int32(val)`` runs a convert primitive whose implicit
+        host->device upload trips ``transfer_guard("disallow")``."""
+        return jax.device_put(np.int32(val))
+
     # -- jitted device functions ---------------------------------------------
     def _decode_and_sample(self, params, cache: ModelCache, tokens, step_key,
                            temps, topks, topps):
@@ -526,7 +582,7 @@ class ServeEngine:
             req.state = "prefill"
             if not self.unified:  # unified prefill has no scratch to reset
                 self.scratch = self._jit_reset_row(self.scratch,
-                                                   jnp.int32(row))
+                                                   self._dev_i32(row))
                 self.metrics.dispatches += 1
 
     # -- prefill --------------------------------------------------------------
@@ -582,7 +638,7 @@ class ServeEngine:
             topps[row] = s.top_p
         self.rng, k = jax.random.split(self.rng)
         keys = jax.random.split(k, nrows)
-        first = np.asarray(self._jit_sample(
+        first = jax.device_get(self._jit_sample(
             logits, keys, jnp.asarray(temps), jnp.asarray(topks),
             jnp.asarray(topps)))
         self.metrics.dispatches += 1
@@ -597,12 +653,12 @@ class ServeEngine:
                 self._ptab[slot] = pages
                 self._dev_ptab = None
                 self.cache = self._jit_insert_paged(
-                    self.cache, self.scratch, jnp.int32(slot),
-                    jnp.int32(row), jnp.asarray(pages))
+                    self.cache, self.scratch, self._dev_i32(slot),
+                    self._dev_i32(row), jnp.asarray(pages))
             else:
                 self.cache = self._jit_insert(self.cache, self.scratch,
-                                              jnp.int32(slot),
-                                              jnp.int32(row))
+                                              self._dev_i32(slot),
+                                              self._dev_i32(row))
             self.metrics.dispatches += 1
 
         for row in rows:
@@ -711,7 +767,7 @@ class ServeEngine:
             self.params, self.cache, feed, step_key, *self._dev_sampling)
         # The one device->host transfer of the step: the sampled (B,)
         # token vector.  Everything below reads host numpy only.
-        toks = np.asarray(sampled)
+        toks = jax.device_get(sampled)
         self.metrics.decode_steps += 1
         self.metrics.dispatches += 1
         self.metrics.transfers_d2h += 1
@@ -873,7 +929,7 @@ class ServeEngine:
             seg_start, jnp.asarray(q_len), jnp.asarray(kv_len), ptab_dev,
             step_key, *sampling_dev)
         # the step's only device->host transfer: the (S,) sampled tokens
-        toks = np.asarray(sampled)
+        toks = jax.device_get(sampled)
         self.metrics.dispatches += 1
         self.metrics.transfers_d2h += 1
         now = time.perf_counter()
@@ -914,14 +970,17 @@ class ServeEngine:
         self.steps += 1
         self.metrics.steps += 1
         self._admit()
-        if self.unified:
-            self._unified_step()
-        elif self.cfg.decode_priority:
-            self._decode_step()
-            self._prefill_step()
-        else:
-            self._prefill_step()
-            self._decode_step()
+        with self._step_guard():
+            if self.unified:
+                self._unified_step()
+            elif self.cfg.decode_priority:
+                self._decode_step()
+                self._prefill_step()
+            else:
+                self._prefill_step()
+                self._decode_step()
+        if self.debug_guards:
+            self._assert_no_retrace()
         self.metrics.end_t = time.perf_counter()
         self.metrics.occupancy_sum += len(self.active) / self.cfg.max_slots
         m = self.metrics

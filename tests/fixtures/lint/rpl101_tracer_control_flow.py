@@ -1,0 +1,31 @@
+"""Seeded violation: branching on a tracer inside a jitted function.
+
+Lines carrying a ``# EXPECT: RPLxxx`` marker are the golden findings the
+corpus test asserts repro-lint reports (and nothing else).
+"""
+import jax
+import jax.numpy as jnp
+
+
+def scale(x):
+    if x.sum() > 0:  # EXPECT: RPL101
+        return x * 2.0
+    while x.max() > 1.0:  # EXPECT: RPL101
+        x = x * 0.5
+    flip = -x if x.mean() < 0 else x  # EXPECT: RPL101
+    for row in x:  # EXPECT: RPL101
+        flip = flip + row
+    return flip
+
+
+scale_jit = jax.jit(scale)
+
+
+def safe(x):
+    # static facts do not taint: shapes, dtypes and len() are fine
+    if x.shape[0] > 4:
+        return jnp.zeros_like(x)
+    return x
+
+
+safe_jit = jax.jit(safe)

@@ -1,0 +1,14 @@
+"""Seeded violation: computed static_argnums (retrace-per-call trap)."""
+import jax
+
+STATICS = (1, 2)
+
+
+def f(x, n, m):
+    return x * n + m
+
+
+f_bad = jax.jit(f, static_argnums=STATICS)  # EXPECT: RPL102
+g_bad = jax.jit(f, static_argnames=[s for s in ("n", "m")])  # EXPECT: RPL102
+f_ok = jax.jit(f, static_argnums=(1, 2))
+g_ok = jax.jit(f, static_argnames=("n", "m"))

@@ -1,0 +1,15 @@
+"""Seeded violation: jitted code mutating captured state (the write
+happens once, at trace time, then silently never again)."""
+import jax
+
+HISTORY = []
+
+
+def accumulate(x):
+    global total  # EXPECT: RPL103
+    total = x
+    HISTORY.append(x)  # EXPECT: RPL103
+    return x + 1
+
+
+accumulate_jit = jax.jit(accumulate)

@@ -1,0 +1,10 @@
+"""Seeded violation: device compute at module import time."""
+import jax
+import jax.numpy as jnp
+
+NORM = jnp.ones((8,)) / 8.0  # EXPECT: RPL104
+KEY = jax.random.key(0)  # EXPECT: RPL104
+
+# registration-style calls are allowed at import time
+jax.tree_util.register_pytree_node(dict, lambda d: (
+    tuple(d.values()), tuple(d)), lambda k, v: dict(zip(k, v)))

@@ -1,0 +1,30 @@
+"""Seeded violations: implicit device->host syncs on the serving hot
+path.  The class is named ``ServeEngine`` so the reachability walk seeds
+from ``step`` exactly as it does for the real engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ServeEngine:
+    def __init__(self):
+        self.probs = jnp.zeros((4, 8))
+        self.table = [0] * 16
+
+    def step(self):
+        return self._pick(self.probs)
+
+    def _pick(self, probs):
+        best = probs.argmax(-1)
+        a = best.item()  # EXPECT: RPL201
+        b = int(best[0])  # EXPECT: RPL202
+        host = np.asarray(probs)  # EXPECT: RPL203
+        d = self.table[best[1]]  # EXPECT: RPL204
+        for tok in best:  # EXPECT: RPL204
+            d += int(tok)  # EXPECT: RPL202
+        pulled = jax.device_get(best)  # sanctioned: explicit, batched
+        return a + b + d + int(pulled[0]) + float(host.sum())
+
+    def offline_report(self, probs):
+        # NOT reachable from an entry point: syncs here are fine
+        return probs.argmax(-1).item()

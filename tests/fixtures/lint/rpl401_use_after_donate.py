@@ -1,0 +1,22 @@
+"""Seeded violation: reading a buffer after donating it to a jit call."""
+import jax
+
+
+def apply_update(params, grads):
+    return jax.tree_util.tree_map(lambda p, g: p - g, params, grads)
+
+
+update_jit = jax.jit(apply_update, donate_argnums=(0,))
+
+
+def train_step(params, grads):
+    new_params = update_jit(params, grads)
+    stale = params  # EXPECT: RPL401
+    return new_params, stale
+
+
+def train_step_ok(params, grads):
+    norm = jax.tree_util.tree_reduce(
+        lambda a, b: a + b.sum(), params, 0.0)  # read BEFORE the donate
+    params = update_jit(params, grads)  # rebinding revives the name
+    return params, norm

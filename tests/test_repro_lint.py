@@ -1,0 +1,191 @@
+"""repro-lint: the tier-1 gate (src/ must be clean), the seeded fixture
+corpus (every rule fires exactly where its golden marker says), the
+pragma round-trip, and concrete kernel-bounds validation — the default
+case registry must pass, and each seeded bad kernel must be caught."""
+
+import io
+import json
+import re
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import RULES, lint_paths, lint_sources
+from repro.analysis.kernel_bounds import (KernelCase, capture_pallas_calls,
+                                          check_kernel_bounds, default_cases)
+from repro.analysis.reporters import render_json, render_text
+
+REPO = Path(__file__).resolve().parent.parent
+FIXDIR = Path(__file__).resolve().parent / "fixtures" / "lint"
+EXPECT = re.compile(r"#\s*EXPECT:\s*(RPL\d+(?:[,\s]+RPL\d+)*)\s*$")
+
+FIXTURES = sorted(FIXDIR.glob("rpl*.py"))
+
+
+def _golden(source: str) -> set[tuple[int, str]]:
+    """(line, code) pairs from the fixture's ``# EXPECT: RPLxxx`` markers."""
+    out = set()
+    for i, line in enumerate(source.splitlines(), 1):
+        m = EXPECT.search(line)
+        if m:
+            for code in m.group(1).replace(",", " ").split():
+                out.add((i, code))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the tier-1 gate: the shipped tree itself must lint clean
+# ---------------------------------------------------------------------------
+
+def test_src_tree_is_lint_clean():
+    """Zero unsuppressed findings over src/ with the concrete
+    kernel-bounds pass on — the same gate scripts/ci.sh enforces."""
+    res = lint_paths([str(REPO / "src")], kernel_bounds_mode="on")
+    buf = io.StringIO()
+    render_text(res, buf)
+    assert res.errors == [], buf.getvalue()
+    assert res.active == [], buf.getvalue()
+    assert res.kernel_cases >= 10  # dense + paged + ragged registries ran
+
+
+def test_rule_catalog_is_complete():
+    assert set(RULES) == {
+        "RPL101", "RPL102", "RPL103", "RPL104",
+        "RPL201", "RPL202", "RPL203", "RPL204",
+        "RPL301", "RPL302", "RPL303", "RPL304", "RPL401"}
+    for r in RULES.values():
+        assert r.summary and r.hint  # every code renders a fix hint
+
+
+# ---------------------------------------------------------------------------
+# seeded corpus: each rule fires exactly where the golden markers say
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fix", FIXTURES, ids=lambda p: p.stem)
+def test_fixture_findings_match_golden(fix):
+    source = fix.read_text()
+    golden = _golden(source)
+    assert golden, f"{fix.name} has no EXPECT markers"
+    res = lint_sources({str(fix): source})
+    assert res.errors == []
+    got = {(f.line, f.code) for f in res.active}
+    assert got == golden
+
+
+@pytest.mark.parametrize("fix", FIXTURES, ids=lambda p: p.stem)
+def test_pragma_roundtrip_suppresses_each_rule(fix):
+    """Inserting ``# repro-lint: disable=<code>`` above every golden line
+    silences the file; the findings survive as *suppressed* (auditable),
+    and ``disable-file`` silences the whole module at once."""
+    source = fix.read_text()
+    golden = _golden(source)
+    lines = source.splitlines()
+    for line_no in sorted({ln for ln, _ in golden}, reverse=True):
+        codes = ",".join(sorted(c for ln, c in golden if ln == line_no))
+        lines.insert(line_no - 1, f"# repro-lint: disable={codes}")
+    res = lint_sources({str(fix): "\n".join(lines) + "\n"})
+    assert res.active == []
+    assert len(res.suppressed) >= len(golden)
+
+    allcodes = ",".join(sorted({c for _, c in golden}))
+    res2 = lint_sources(
+        {str(fix): f"# repro-lint: disable-file={allcodes}\n" + source})
+    assert res2.active == []
+
+
+def test_wrong_pragma_code_does_not_suppress():
+    source = FIXDIR.joinpath("rpl401_use_after_donate.py").read_text()
+    patched = source.replace("stale = params",
+                             "stale = params  # repro-lint: disable=RPL101")
+    res = lint_sources({"f.py": patched})
+    assert any(f.code == "RPL401" for f in res.active)
+
+
+# ---------------------------------------------------------------------------
+# kernel bounds: the real kernels pass, seeded bad kernels are caught
+# ---------------------------------------------------------------------------
+
+def test_kernel_bounds_default_registry_is_clean():
+    """Every BlockSpec index map of the shipped kernels stays in bounds
+    over its full grid for the tier-1 test shapes (partial pages, null
+    pages and inactive segments included)."""
+    findings = check_kernel_bounds()
+    assert findings == [], [(f.code, f.message) for f in findings]
+
+
+def test_kernel_bounds_covers_paged_and_ragged_grids():
+    """The paged and ragged cases really reach their pallas_call with
+    scalar-prefetch operands and a non-trivial grid — i.e. the pass is
+    exercising `pt[bh // hkv, j]`-style table walks, not an empty list."""
+    by_kind = {"decode_paged": [], "ragged_paged": []}
+    for case in default_cases():
+        kind = case.name.split("[")[0]
+        if kind not in by_kind:
+            continue
+        captured = []
+        with capture_pallas_calls(captured):
+            case.thunk()
+        by_kind[kind].extend(captured)
+    for kind, caps in by_kind.items():
+        assert caps, f"no pallas_call captured for {kind}"
+        for cap in caps:
+            assert cap.num_scalar_prefetch >= 2, kind
+            assert len(cap.grid) == 2 and np.prod(cap.grid) > 1, kind
+
+
+def _bad_kernel_cases() -> dict[str, KernelCase]:
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    shape = (4, 8, 16)
+
+    def copy_kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def extra_arg_kernel(x_ref, o_ref, mystery_ref):
+        o_ref[...] = x_ref[...]
+
+    good = pl.BlockSpec((1, 8, 16), lambda i: (i, 0, 0))
+
+    def call(kernel, in_spec, out_dtype=jnp.float32):
+        def thunk():
+            fn = pl.pallas_call(
+                kernel, grid=(4,), in_specs=[in_spec], out_specs=good,
+                out_shape=jax.ShapeDtypeStruct(shape, out_dtype))
+            return fn(np.zeros(shape, np.float32))
+        return thunk
+
+    return {
+        "RPL301": KernelCase("oob_index_map", call(
+            copy_kernel, pl.BlockSpec((1, 8, 16), lambda i: (i + 1, 0, 0)))),
+        "RPL302": KernelCase("non_tiling_block", call(
+            copy_kernel, pl.BlockSpec((1, 3, 16), lambda i: (i, 0, 0)))),
+        "RPL303": KernelCase("arity_mismatch", call(extra_arg_kernel, good)),
+        "RPL304": KernelCase("dtype_mismatch", call(
+            copy_kernel, good, out_dtype=jnp.bfloat16)),
+    }
+
+
+@pytest.mark.parametrize("code", ["RPL301", "RPL302", "RPL303", "RPL304"])
+def test_kernel_bounds_catches_seeded_violation(code):
+    case = _bad_kernel_cases()[code]
+    findings = check_kernel_bounds([case])
+    assert any(f.code == code for f in findings), \
+        [(f.code, f.message) for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# reporters
+# ---------------------------------------------------------------------------
+
+def test_json_reporter_shape():
+    source = FIXDIR.joinpath("rpl104_import_time_compute.py").read_text()
+    res = lint_sources({"mod.py": source})
+    doc = json.loads(render_json(res))
+    assert doc["tool"] == "repro-lint"
+    assert doc["ok"] is False
+    assert doc["counts"]["RPL104"] == 2
+    f = next(x for x in doc["findings"] if x["code"] == "RPL104")
+    assert {"code", "path", "line", "col", "message"} <= set(f)

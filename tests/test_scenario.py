@@ -309,6 +309,10 @@ def test_engine_backend_unsupported_and_errors(tiny_spec):
     disagg = _tiny_scenario(tiny_spec, mode="disaggregated")
     rep, = run([disagg], backend="engine")
     assert rep.status == "unsupported"
+    # the refusal names the mode and lists what IS lowerable
+    assert "'disaggregated'" in rep.error
+    for mode in ("monolithic", "chunked", "speculative"):
+        assert mode in rep.error
     paper = Scenario.make("llama3-70b", use_case="chat", batch=1)
     rep, = run([paper], backend="engine")
     assert rep.status == "error"

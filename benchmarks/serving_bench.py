@@ -15,6 +15,12 @@ trajectory (tokens/s, TTFT, TPOT, slot occupancy per cell).
         --out artifacts/benchmarks/unified_step.json  # one-dispatch win
     PYTHONPATH=src python benchmarks/serving_bench.py --speculative \
         --out artifacts/benchmarks/speculative_sync.json  # sync batching
+    PYTHONPATH=src python benchmarks/serving_bench.py --trace [trace.json] \
+        # replay a (generated or loaded) bursty multi-tenant trace through
+        # the prefix-cache engine AND a cache-off twin; token identity
+        # asserted, SLO attainment + goodput reported for both
+    PYTHONPATH=src python benchmarks/serving_bench.py --compare-prefix \
+        --out artifacts/benchmarks/prefix_cache.json  # prefix-cache win
 
 Every cell reports peak KV bytes and cache utilization alongside
 throughput/latency (``kv_reserved_bytes`` / ``kv_peak_bytes`` /
@@ -288,6 +294,127 @@ def compare_unified(sc, args) -> dict:
     return out
 
 
+def run_trace(sc, args) -> dict:
+    """Replay one bursty multi-tenant multi-turn trace through the
+    prefix-cache engine and through an identical cache-off engine holding
+    the SAME page budget, assert the greedy outputs are token-identical
+    per request, and report SLO attainment / goodput / hit rate for both.
+
+    ``args.trace`` is either ``True`` (generate a trace from the flags and
+    seed) or a path to a ``trace_to_json`` file; ``--trace-out`` writes the
+    trace used, so a generated trace can be replayed elsewhere.
+    """
+    import dataclasses
+
+    from repro.scenario.engine_backend import lower_model
+    from repro.serving import (TraceConfig, generate_trace, replay,
+                               smoke_config, trace_from_json, trace_to_json)
+
+    spec, model, params = lower_model(sc.model)
+    tcfg = None
+    if isinstance(args.trace, str):
+        trace = trace_from_json(Path(args.trace).read_text())
+    else:
+        tcfg = TraceConfig(n_requests=args.requests, seed=args.seed,
+                           vocab=spec.vocab)
+        if args.smoke:
+            tcfg = smoke_config(tcfg)
+        trace = generate_trace(tcfg)
+    if args.trace_out:
+        Path(args.trace_out).write_text(trace_to_json(trace, tcfg))
+        print(f"wrote {args.trace_out}", file=sys.stderr)
+
+    ps = page_size(args, sc)
+    out = {"n_trace_requests": len(trace),
+           "n_turns": max((t.turn for t in trace), default=0) + 1,
+           "tenants": sorted({t.tenant for t in trace}),
+           "page_size": ps, "max_slots": args.slots,
+           "max_seq": args.max_seq, "n_pages": args.n_pages,
+           "ttft_slo_s": args.ttft_slo, "tpot_slo_s": args.tpot_slo,
+           "trace_config": dataclasses.asdict(tcfg) if tcfg else None}
+    outputs: dict[str, list] = {}
+    for mode in ("prefix_off", "prefix_on"):
+        cfg = EngineConfig(max_slots=args.slots, max_seq=args.max_seq,
+                           chunk_size=min(args.chunk, args.max_seq),
+                           prefill_rows=args.prefill_rows, unified=True,
+                           cache_layout="paged", page_size=ps,
+                           n_pages=args.n_pages,
+                           prefix_cache=(mode == "prefix_on"))
+        eng = ServeEngine(model, params, cfg, rng=jax.random.key(1))
+        # warm the jitted programs so request 0 isn't all compile time
+        eng.serve([Request(prompt=[1, 2, 3, 4, 5], max_new_tokens=2)])
+        eng.metrics = EngineMetrics()
+        eng.pager.peak_in_use = eng.pager.pages_in_use
+        summ, reqs = replay(eng, trace, ttft_slo_s=args.ttft_slo,
+                            tpot_slo_s=args.tpot_slo,
+                            time_scale=args.time_scale)
+        assert all(r.state == "done" for r in reqs)
+        outputs[mode] = [list(r.output) for r in reqs]
+        out[mode] = dataclasses.asdict(summ)
+    # the cache must never change what is decoded, only when: per-request
+    # greedy outputs are compared exactly, not just digested
+    assert outputs["prefix_off"] == outputs["prefix_on"], \
+        "prefix-cache engine diverged from the cache-off engine"
+    out["token_identity"] = True
+    on, off = out["prefix_on"], out["prefix_off"]
+    out["hit_rate"] = on["engine"].get("prefix_hit_rate", 0.0)
+    out["ttft_win"] = off["ttft_mean_s"] / max(on["ttft_mean_s"], 1e-12)
+    out["goodput_win"] = (on["goodput_tok_s"]
+                          / max(off["goodput_tok_s"], 1e-12))
+    out["slo_attainment_gain"] = (on["slo_attainment"]
+                                  - off["slo_attainment"])
+    return out
+
+
+def compare_prefix(sc, args) -> dict:
+    """The trace-replay cache-on-vs-off comparison (:func:`run_trace`)
+    plus the analytical loop closed over the prefix cache: the Scenario is
+    lowered to a prefix-cache engine run (multi-tenant shared templates),
+    its MEASURED hit rate is fed back into
+    ``Optimizations.prefix_hit_rate``, and ``repro.scenario.compare``
+    reports the predicted-vs-measured TTFT and max-concurrency error —
+    alongside the hit=0 prediction so the artifact shows how much of the
+    prefill/capacity win the model attributes to the cache."""
+    import dataclasses
+
+    from repro.scenario import compare, run as run_scenarios
+
+    out = run_trace(sc, args)
+    ps = page_size(args, sc)
+    # the analytical loop runs in monolithic mode: chunked reports call
+    # out TPOT only, while the prefix cache's headline prediction is the
+    # TTFT of the one prefill pass it discounts
+    sc_run = sc.replace(mode="monolithic", opt=dataclasses.replace(
+        sc.opt, paged_kv=True, kv_page_size=ps, prefix_hit_rate=0.0))
+    meas = run_scenarios(
+        [sc_run], backend="engine",
+        engine_kw=dict(prefix_cache=True, max_slots=args.slots,
+                       max_seq=args.max_seq,
+                       prefill_rows=args.prefill_rows, page_size=ps,
+                       n_requests=args.requests))[0]
+    hit = float((meas.extra.get("engine") or {}).get("prefix_hit_rate", 0.0))
+    pred = run_scenarios(
+        [sc_run.replace(opt=dataclasses.replace(
+            sc_run.opt, prefix_hit_rate=hit))],
+        backend="analytical")[0]
+    pred0 = run_scenarios([sc_run], backend="analytical")[0]
+    errs = compare(pred, meas)
+    out["analytical"] = {
+        "status": meas.status,
+        "measured_hit_rate": hit,
+        "predicted_ttft_s": pred.ttft_s,
+        "predicted_ttft_s_no_cache": pred0.ttft_s,
+        "measured_ttft_s": meas.ttft_s,
+        "predicted_max_concurrency": pred.max_concurrency,
+        "predicted_max_concurrency_no_cache": pred0.max_concurrency,
+        "measured_max_concurrency": meas.max_concurrency,
+        "ttft_error": errs.get("ttft_s"),
+        "max_concurrency_error": errs.get("max_concurrency"),
+        "compare": errs,
+    }
+    return out
+
+
 def compare_speculative(sc, args) -> dict:
     """Per-token-sync vs batched-sync speculative decoding on identical
     prompts (self-draft): the decoder's draft loop used to block on the
@@ -411,6 +538,29 @@ def main() -> None:
                          "verify round; skips the rate sweep)")
     ap.add_argument("--n-spec", type=int, default=4,
                     help="draft window for --speculative")
+    ap.add_argument("--trace", nargs="?", const=True, default=None,
+                    metavar="PATH",
+                    help="replay a trace (from PATH, or generated from the "
+                         "flags+seed when bare) through the prefix-cache "
+                         "engine and a cache-off twin on the same page "
+                         "budget; greedy outputs are asserted "
+                         "token-identical")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the trace used by --trace/--compare-prefix "
+                         "as JSON (round-trips via trace_from_json)")
+    ap.add_argument("--compare-prefix", action="store_true",
+                    help="--trace replay plus the closed analytical loop: "
+                         "the measured hit rate is fed into "
+                         "opt.prefix_hit_rate and compare() reports the "
+                         "predicted-vs-measured TTFT / max-concurrency "
+                         "error")
+    ap.add_argument("--ttft-slo", type=float, default=5.0,
+                    help="TTFT SLO (s) for trace-replay goodput")
+    ap.add_argument("--tpot-slo", type=float, default=1.0,
+                    help="TPOT SLO (s) for trace-replay goodput")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="compress (<1) or stretch (>1) trace arrival "
+                         "times at replay")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweep for CI: one rate, two mixes")
     ap.add_argument("--out", default=None, help="write JSON here too")
@@ -429,7 +579,8 @@ def main() -> None:
         scenario next to a paged engine run."""
         import dataclasses
         sc = build_scenario(args)
-        paged = args.paged or args.unified or args.compare_unified
+        paged = (args.paged or args.unified or args.compare_unified
+                 or args.compare_prefix or args.trace is not None)
         if paged and not sc.opt.paged_kv:
             sc = sc.replace(opt=dataclasses.replace(
                 sc.opt, paged_kv=True, kv_page_size=page_size(args, sc)))
@@ -448,6 +599,39 @@ def main() -> None:
               f"{res['per_token_sync']['syncs_per_round']:.1f} -> "
               f"{res['batched_sync']['syncs_per_round']:.1f} host pulls "
               "per verify round", file=sys.stderr)
+        if args.out:
+            Path(args.out).write_text(text)
+            print(f"wrote {args.out}", file=sys.stderr)
+        return
+
+    if args.compare_prefix or args.trace is not None:
+        sc = scenario_for_run()
+        res = (compare_prefix if args.compare_prefix else run_trace)(sc, args)
+        report = {"bench": ("serving_bench/prefix_cache"
+                            if args.compare_prefix
+                            else "serving_bench/trace_replay"),
+                  "scenario": sc.to_dict(), "smoke": args.smoke,
+                  "result": res}
+        text = json.dumps(report, indent=2)
+        print(text)
+        on, off = res["prefix_on"], res["prefix_off"]
+        print(f"prefix cache on vs off (token-identical): "
+              f"hit rate {res['hit_rate']:.2f}, "
+              f"ttft {off['ttft_mean_s'] * 1e3:.1f} -> "
+              f"{on['ttft_mean_s'] * 1e3:.1f} ms, "
+              f"goodput {off['goodput_tok_s']:.1f} -> "
+              f"{on['goodput_tok_s']:.1f} tok/s, "
+              f"slo {off['slo_attainment']:.2f} -> "
+              f"{on['slo_attainment']:.2f}", file=sys.stderr)
+        if args.compare_prefix:
+            a = res["analytical"]
+            err = {k: (f"{a[k]:.3f}" if a[k] is not None else "n/a")
+                   for k in ("ttft_error", "max_concurrency_error")}
+            print(f"analytical loop: measured hit "
+                  f"{a['measured_hit_rate']:.2f}, "
+                  f"ttft error {err['ttft_error']}, "
+                  f"max-concurrency error {err['max_concurrency_error']}",
+                  file=sys.stderr)
         if args.out:
             Path(args.out).write_text(text)
             print(f"wrote {args.out}", file=sys.stderr)

@@ -88,4 +88,11 @@ echo "== unified step: two-dispatch-vs-unified equivalence smoke =="
 python benchmarks/serving_bench.py --compare-unified --smoke > /dev/null
 # (compare_unified asserts token-identical outputs before reporting the win)
 
+echo "== prefix cache: trace-replay smoke (cache-on vs cache-off) =="
+python benchmarks/serving_bench.py --trace --smoke > /dev/null
+# (run_trace replays one bursty multi-tenant multi-turn trace through the
+#  prefix-cache engine and a cache-off twin on the same page budget and
+#  asserts the greedy outputs are token-identical before reporting the
+#  hit-rate / TTFT / goodput win)
+
 echo "CI OK"

@@ -46,6 +46,9 @@ ENTRY_POINTS: tuple[tuple[str, str], ...] = (
     ("SpeculativeDecoder", "generate"),
     ("SpeculativeDecoder", "decode_round"),
     ("SpeculativeDecoder", "prefill"),
+    ("PrefixCache", "lookup"),
+    ("PrefixCache", "acquire"),
+    ("PrefixCache", "insert"),
 )
 
 #: parameter names that carry device arrays into hot-path helpers

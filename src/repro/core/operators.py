@@ -32,6 +32,13 @@ class Optimizations:
     #: one page per request (lossless — changes capacity, not math)
     paged_kv: bool = False
     kv_page_size: int = 16  # tokens per page when paged_kv is set
+    #: fraction of prompt tokens served from a shared radix-tree prefix
+    #: cache (system prompts / few-shot templates / multi-turn history):
+    #: prefill computes only the (1 - hit) uncached suffix, and the hit
+    #: fraction's KV is stored ONCE across concurrent requests instead of
+    #: once per request (requires ``paged_kv`` — pages are the sharing
+    #: unit; lossless, greedy outputs are unchanged)
+    prefix_hit_rate: float = 0.0
     weight_sparsity: float = 0.0  # fraction of weights removed (lossy)
     beam: int = 1  # beam width S_b
     allreduce_decomposed: bool = False  # AR -> RS + AG (paper §III-C)

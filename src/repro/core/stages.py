@@ -103,20 +103,40 @@ def kv_bytes_per_request(spec: ModelSpec, opt: Optimizations,
             * (1.0 - opt.kv_prune))
 
 
+def _hit_rate(opt: Optimizations) -> float:
+    """Effective prefix-cache hit rate: pages are the sharing unit, so the
+    rate only applies under ``paged_kv``; clamped to [0, 1]."""
+    if not opt.paged_kv:
+        return 0.0
+    return min(max(opt.prefix_hit_rate, 0.0), 1.0)
+
+
 def concurrency_from_kv_budget(spec: ModelSpec, opt: Optimizations,
                                wl: Workload, kv_budget_bytes: float,
                                reserved_ctx: int | None = None) -> int:
     """Shared core of the §VI-A inversion: concurrent requests a KV byte
     budget supports.  A dense engine reserves ``reserved_ctx`` tokens per
     slot up front (its ``max_seq``); a paged engine (``opt.paged_kv``)
-    holds only the pages the actual context needs, rounded up."""
+    holds only the pages the actual context needs, rounded up.
+
+    With a prefix cache, the hit fraction of every prompt is ONE shared
+    copy: its bytes are charged once against the budget, and each request
+    is charged only its private suffix + decode tokens (plus at least one
+    page — the copy-on-write fork a full hit forks its tail into).
+    """
     ctx = wl.tau_p + wl.beam * wl.tau_d
     if not opt.paged_kv and reserved_ctx is not None:
         ctx = max(ctx, reserved_ctx)
     per_req = kv_bytes_per_request(spec, opt, ctx)
+    budget = max(kv_budget_bytes, 0.0)
+    hit = _hit_rate(opt)
+    if hit > 0.0:
+        shared = kv_bytes_per_request(spec, opt, wl.tau_p * hit)
+        budget -= shared
+        per_req = max(per_req - shared, kv_bytes_per_request(spec, opt, 1))
     if per_req <= 0:
         return 0
-    return int(max(kv_budget_bytes, 0.0) // per_req)
+    return int(max(budget, 0.0) // per_req)
 
 
 def max_concurrency(spec: ModelSpec, platform: Platform,
@@ -162,11 +182,21 @@ def _pipeline_time(per_stage: float, par: ParallelismConfig,
 
 def prefill(spec: ModelSpec, platform: Platform, par: ParallelismConfig,
             opt: Optimizations, wl: Workload) -> StageResult:
-    """TTFT: full forward pass over tau_p tokens (compute-bound, §II-B)."""
+    """TTFT: full forward pass over tau_p tokens (compute-bound, §II-B).
+
+    With a prefix cache (``opt.prefix_hit_rate`` under ``paged_kv``), only
+    the uncached suffix of each prompt is computed: q_len drops to
+    ``tau_p * (1 - hit)`` (never below the one recomputed last token) while
+    kv_len stays ``tau_p`` — the suffix still attends the shared pages.
+    """
     validate(par, platform.num_npus, spec.n_layers,
              spec.moe.num_experts if spec.moe else None)
-    fwd = PassSpec(batch=wl.batch / par.dp, q_len=wl.tau_p, kv_len=wl.tau_p,
-                   causal_square=True)
+    hit = _hit_rate(opt)
+    q_len = max(wl.tau_p * (1.0 - hit), 1.0) if hit > 0.0 else wl.tau_p
+    # causal_square halves attention FLOPs for the q==kv triangle; a cached
+    # suffix sits at the END of the context and attends nearly all of it
+    fwd = PassSpec(batch=wl.batch / par.dp, q_len=q_len, kv_len=wl.tau_p,
+                   causal_square=(hit == 0.0))
     resident = _resident_bytes(spec, par, opt, wl, wl.tau_p)
     # Prefill needs logits only for the last position of each request.
     ops = model_ops(spec, fwd, par, opt,

@@ -28,6 +28,14 @@ Lowering rules:
     analytical chunked-TPOT model (one fused pass per iteration,
     ``core.stages.chunked``) gets measured against a real fused
     implementation instead of a two-dispatch approximation.
+  * ``engine_kw["prefix_cache"]=True`` — or a Scenario with
+    ``opt.prefix_hit_rate > 0`` — lowers to the radix-tree prefix-cache
+    engine (forces the unified paged step).  Requests are then generated
+    as a multi-tenant shared-template mix whose shared fraction tracks
+    ``opt.prefix_hit_rate`` (default 0.75 when only the flag is set), so
+    the measured hit rate / TTFT / max concurrency in
+    ``Report.extra["engine"]`` are comparable to the analytical
+    prefix-discounted prediction.
   * ``opt.paged_kv`` lowers to the engine's paged KV layout
     (``cache_layout="paged"``, ``page_size=opt.kv_page_size``).  The pool
     size comes from ``engine_kw["n_pages"]``, else from an HBM budget
@@ -54,7 +62,7 @@ LOWERABLE_MODES = ("monolithic", "chunked", "speculative")
 DEFAULTS = dict(max_slots=8, max_seq=256, prefill_rows=2, max_prompt=64,
                 max_new=32, n_requests=None, seed=0, temperature=0.0,
                 cache_layout=None, page_size=None, n_pages=None,
-                kv_budget_bytes=None, unified=False)
+                kv_budget_bytes=None, unified=False, prefix_cache=False)
 
 
 def lower_model(ref):
@@ -121,19 +129,43 @@ def evaluate(sc: Scenario, **engine_kw) -> Report:
                       error=f"{type(e).__name__}: {e}")
 
 
-def _make_requests(sc: Scenario, spec, geo: dict, kw: dict):
+def _make_requests(sc: Scenario, spec, geo: dict, kw: dict,
+                   prefix: bool = False):
     import numpy as np
     from ..serving import Request
     from ..serving.sampling import SamplingConfig
 
     rng = np.random.default_rng(int(kw["seed"]))
     sampling = SamplingConfig(temperature=float(kw["temperature"]))
-    return [
-        Request(prompt=[int(t) for t in
-                        rng.integers(0, spec.vocab, geo["prompt_len"])],
-                max_new_tokens=geo["max_new"], sampling=sampling)
-        for _ in range(geo["n_requests"])
-    ]
+    if not prefix:
+        return [
+            Request(prompt=[int(t) for t in
+                            rng.integers(0, spec.vocab, geo["prompt_len"])],
+                    max_new_tokens=geo["max_new"], sampling=sampling)
+            for _ in range(geo["n_requests"])
+        ]
+    # multi-tenant shared-template mix: each tenant's requests share a
+    # fixed prompt template whose length tracks opt.prefix_hit_rate, so
+    # the measured hit rate is comparable to the analytical discount
+    frac = sc.opt.prefix_hit_rate if sc.opt.prefix_hit_rate > 0 else 0.75
+    frac = min(max(frac, 0.05), 0.95)
+    tmpl_len = max(1, min(geo["prompt_len"] - 1,
+                          round(geo["prompt_len"] * frac)))
+    tenants = {
+        f"tenant{t}": [int(x) for x in
+                       rng.integers(0, spec.vocab, tmpl_len)]
+        for t in range(2)
+    }
+    names = list(tenants)
+    out = []
+    for i in range(geo["n_requests"]):
+        tenant = names[i % len(names)]
+        suffix = [int(x) for x in rng.integers(
+            0, spec.vocab, geo["prompt_len"] - tmpl_len)]
+        out.append(Request(prompt=tenants[tenant] + suffix,
+                           max_new_tokens=geo["max_new"], sampling=sampling,
+                           tenant=tenant, template_id=f"{tenant}/tmpl0"))
+    return out
 
 
 def _paged_lowering(sc: Scenario, spec, geo: dict, kw: dict) -> dict:
@@ -192,12 +224,15 @@ def _run_engine(sc: Scenario, spec, model, params, kw: dict) -> Report:
         chunk = max(1, min(sc.chunked.chunk, geo["prompt_len"]))
     else:  # monolithic: the whole prompt in one prefill chunk
         chunk = geo["prompt_len"]
-    paging = _paged_lowering(sc, spec, geo, kw)
+    prefix = bool(kw["prefix_cache"]) or sc.opt.prefix_hit_rate > 0
+    kw["unified"] = bool(kw["unified"]) or prefix  # prefix needs the
+    paging = _paged_lowering(sc, spec, geo, kw)    # unified paged step
     cfg = EngineConfig(max_slots=int(kw["max_slots"]), max_seq=geo["max_seq"],
                        chunk_size=chunk, prefill_rows=int(kw["prefill_rows"]),
-                       unified=bool(kw["unified"]), **paging)
+                       unified=bool(kw["unified"]), prefix_cache=prefix,
+                       **paging)
     eng = ServeEngine(model, params, cfg, rng=jax.random.key(int(kw["seed"])))
-    reqs = _make_requests(sc, spec, geo, kw)
+    reqs = _make_requests(sc, spec, geo, kw, prefix=prefix)
     eng.serve(reqs)
     summary = eng.metrics.summary(reqs)
     done = [r for r in reqs if r.state == "done"]
@@ -216,6 +251,7 @@ def _run_engine(sc: Scenario, spec, model, params, kw: dict) -> Report:
                                  "chunk_size": cfg.chunk_size,
                                  "prefill_rows": cfg.prefill_rows,
                                  "unified": cfg.unified,
+                                 "prefix_cache": cfg.prefix_cache,
                                  **paging},
                "model": spec.name})
 

@@ -1,9 +1,16 @@
 """Serving substrate: continuous-batching engine (batched chunked prefill,
-device-side sampling, dense or paged KV cache), page allocator,
-speculative decoding, beam search, sampling."""
+device-side sampling, dense or paged KV cache), page allocator, radix-tree
+prefix cache, trace-replay workload generator, speculative decoding, beam
+search, sampling."""
 
 from .engine import EngineConfig, EngineMetrics, Request, ServeEngine
 from .paging import PageAllocator, pages_for
+from .prefix_cache import PrefixCache, PrefixCacheStats
+from .workload import (ReplaySummary, TraceConfig, TraceRequest,
+                       generate_trace, replay, smoke_config, trace_from_json,
+                       trace_to_json)
 
 __all__ = ["EngineConfig", "EngineMetrics", "Request", "ServeEngine",
-           "PageAllocator", "pages_for"]
+           "PageAllocator", "pages_for", "PrefixCache", "PrefixCacheStats",
+           "TraceConfig", "TraceRequest", "ReplaySummary", "generate_trace",
+           "replay", "smoke_config", "trace_from_json", "trace_to_json"]

@@ -95,6 +95,7 @@ from ..models.attention import (PackedSegs, PagedAttnCache,
                                 paged_insert_rows)
 from ..models.model import Model, ModelCache
 from .paging import PageAllocator
+from .prefix_cache import PrefixCache
 from .sampling import SamplingConfig, sample_slots
 
 
@@ -105,10 +106,15 @@ class Request:
     eos_id: int | None = None
     sampling: SamplingConfig = field(default_factory=SamplingConfig)
     rid: int = -1
+    #: optional multi-tenant trace metadata (workload generator / metrics
+    #: attribution only — the scheduler never reads these)
+    tenant: str | None = None
+    template_id: str | None = None
     # filled by the engine:
     output: list[int] = field(default_factory=list)
     state: str = "queued"  # queued | prefill | decode | done
     slot: int = -1
+    n_cached: int = 0  # prompt tokens served from shared prefix-cache pages
     ttft_steps: int = 0  # engine steps until first token (TTFT proxy)
     tpot_steps: int = 0
     submit_t: float = 0.0  # wall-clock timestamps (perf_counter)
@@ -148,14 +154,24 @@ class EngineConfig:
     #: K/V written directly into their pages (requires cache_layout=
     #: "paged" and an attention-only stack)
     unified: bool = False
+    #: radix-tree prefix cache over KV pages: requests whose prompt shares
+    #: a page-aligned prefix with an earlier request map those pages
+    #: read-only into their page table and prefill only the uncached
+    #: suffix (requires ``unified=True`` — the packed step's ragged
+    #: attention reads shared pages in place; greedy outputs stay
+    #: token-identical to a cache-off engine)
+    prefix_cache: bool = False
     #: runtime enforcement of the hot-path invariants: every engine step
     #: runs under ``jax.transfer_guard("disallow")`` (any *implicit*
     #: host<->device transfer — e.g. a numpy array slipped straight into
     #: a jitted call — raises; the engine's own uploads/pulls are explicit
     #: ``jax.device_put``/``jax.device_get`` and stay legal) and the jit
     #: caches of the steady-state dispatches are asserted flat across slot
-    #: churn (a growing cache is a retrace).  Greedy outputs are identical
-    #: with the guards on or off — this mode only *observes*.
+    #: churn (a growing cache is a retrace).  In the paged layout every
+    #: step also runs ``PageAllocator.check()`` (refcount / free-list
+    #: audit) and, with the prefix cache on, the radix-tree audit.
+    #: Greedy outputs are identical with the guards on or off — this mode
+    #: only *observes*.
     debug_guards: bool = False
 
 
@@ -188,6 +204,24 @@ class EngineMetrics:
     preemptions: int = 0  # victims pushed back to the queue (pool ran dry)
     capacity_stops: int = 0  # requests force-finished (no victim available)
     pages_in_use_peak: int = 0
+    # -- prefix-cache counters (mirrors of PrefixCacheStats + engine-side) --
+    prefix_lookups: int = 0
+    prefix_hits: int = 0  # submits whose prompt matched >= 1 cached page
+    prefix_lookup_tokens: int = 0
+    prefix_hit_tokens: int = 0  # tokens matched at submit-time lookup
+    prefix_cached_tokens: int = 0  # prefill tokens actually skipped
+    prefix_cow_forks: int = 0  # full-hit tail pages forked copy-on-write
+    prefix_inserted_pages: int = 0
+    prefix_evicted_pages: int = 0
+    prefix_shared_pages_peak: int = 0  # peak pages mapped by > 1 holder
+    #: tenant -> [hit_tokens, lookup_tokens] (per-tenant hit attribution)
+    prefix_by_tenant: dict = field(default_factory=dict)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Token-weighted submit-time hit rate."""
+        return (self.prefix_hit_tokens / self.prefix_lookup_tokens
+                if self.prefix_lookup_tokens else 0.0)
 
     @property
     def wall_s(self) -> float:
@@ -229,6 +263,22 @@ class EngineMetrics:
             "pages_in_use_peak": self.pages_in_use_peak,
             "kv_used_tokens_peak": self.kv_used_tokens_peak,
         }
+        if self.prefix_lookups:  # keep cache-off summaries unchanged
+            out.update(
+                prefix_hit_rate=self.prefix_hit_rate,
+                prefix_lookups=self.prefix_lookups,
+                prefix_hits=self.prefix_hits,
+                prefix_hit_tokens=self.prefix_hit_tokens,
+                prefix_lookup_tokens=self.prefix_lookup_tokens,
+                prefix_cached_tokens=self.prefix_cached_tokens,
+                prefix_cow_forks=self.prefix_cow_forks,
+                prefix_inserted_pages=self.prefix_inserted_pages,
+                prefix_evicted_pages=self.prefix_evicted_pages,
+                prefix_shared_pages_peak=self.prefix_shared_pages_peak,
+                prefix_by_tenant={t: {"hit_tokens": h, "lookup_tokens": n,
+                                      "hit_rate": h / n if n else 0.0}
+                                  for t, (h, n)
+                                  in sorted(self.prefix_by_tenant.items())})
         done = [r for r in (requests or []) if r.state == "done"]
         if done:
             ttfts = sorted(r.ttft_s for r in done)
@@ -267,6 +317,11 @@ class ServeEngine:
             if model.spec.attn.kind == "swa":
                 raise ValueError("unified=True has no sliding-window "
                                  "masking in the ragged kernel yet")
+        if config.prefix_cache and not config.unified:
+            raise ValueError(
+                "prefix_cache=True requires unified=True: shared pages are "
+                "read in place by the packed step's ragged attention; the "
+                "dense-scratch prefill path cannot map them")
         self.unified = config.unified
         self.paged = config.cache_layout == "paged"
         if self.paged:
@@ -306,6 +361,12 @@ class ServeEngine:
         else:
             self.cache = model.init_cache(config.max_slots, config.max_seq,
                                           layout="dense")
+        # radix-tree prefix cache: shares pages across requests through the
+        # refcounted allocator; `_attached` tracks which queued/admitted
+        # rids already hold their shared-prefix references
+        self.prefix = PrefixCache(self.pager) if config.prefix_cache \
+            else None
+        self._attached: set[int] = set()
         if self.unified:
             # the packed step writes prefill K/V straight into pages — no
             # dense scratch cache exists at all
@@ -365,6 +426,7 @@ class ServeEngine:
         self._jit_insert_paged = jax.jit(self._insert_paged,
                                          donate_argnums=(0,))
         self._jit_reset_row = jax.jit(self._reset_row, donate_argnums=(0,))
+        self._jit_copy_page = jax.jit(self._copy_page, donate_argnums=(0,))
         self._jit_sample = jax.jit(sample_slots)
         # two fixed packed profiles, both one dispatch per step: the mixed
         # decode+prefill layout, and a decode-only layout (T = max_slots,
@@ -532,6 +594,20 @@ class ServeEngine:
             scratch.lengths, jnp.zeros((1,), scratch.lengths.dtype), (row,))
         return ModelCache(layers=layers, lengths=lengths)
 
+    @staticmethod
+    def _copy_page(cache: ModelCache, src, dst) -> ModelCache:
+        """Copy-on-write fork: duplicate physical page ``src`` into ``dst``
+        across every paged pool leaf (page axis is dim 1 behind the leading
+        layer-repeats axis).  Both ids are traced scalars, so every
+        (src, dst) pair shares one compiled program."""
+        def cp(a):
+            page = jax.lax.dynamic_slice_in_dim(a, src, 1, axis=1)
+            return jax.lax.dynamic_update_slice_in_dim(a, page, dst, axis=1)
+
+        return ModelCache(layers=tree.map(cp, cache.layers),
+                          lengths=cache.lengths,
+                          page_table=cache.page_table)
+
     # -- public API --------------------------------------------------------------
     def submit(self, req: Request) -> int:
         req.rid = next(self._ids)
@@ -549,6 +625,13 @@ class ServeEngine:
                     f"{limit} pages = {cap} tokens (max_pages="
                     f"{self.max_pages} x page_size={self.cfg.page_size}, "
                     f"usable pool={self.pager.usable_pages})")
+        if self.prefix is not None:
+            # submit-time lookup: a read-only peek recorded in the cache's
+            # own stats (what was cached *at arrival*).  The engine's
+            # serving-time hit metrics are counted at admission, where
+            # shared pages are actually mapped — under batched submission
+            # the cache warms up between submit and admit.
+            self.prefix.lookup(req.prompt)
         req.state = "queued"
         req.submit_t = time.perf_counter()
         self.queue.append(req)
@@ -572,13 +655,18 @@ class ServeEngine:
                and len(self.active) + len(self._prefills)
                < self.cfg.max_slots):
             req = self.queue[0]
-            if self.paged and not self.pager.ensure(req.rid,
-                                                    len(self._src(req)) + 1):
-                break  # pool dry: wait for frees (decode keeps running)
+            if self.paged:
+                if self.prefix is not None and req.rid not in self._attached:
+                    self._prefix_attach(req)
+                if not self._ensure_or_evict(req.rid,
+                                             len(self._src(req)) + 1):
+                    break  # pool dry: wait for frees (decode keeps running)
             self.queue.popleft()
             row = self._free_rows.pop()
             self._prefills[row] = req
-            self._prefill_pos[row] = 0
+            # cache-hit prefill starts past the shared prefix: only the
+            # uncached suffix is ever computed
+            self._prefill_pos[row] = req.n_cached
             req.state = "prefill"
             if not self.unified:  # unified prefill has no scratch to reset
                 self.scratch = self._jit_reset_row(self.scratch,
@@ -664,6 +752,72 @@ class ServeEngine:
         for row in rows:
             self._promote_prefill(row, int(first[row]), now, install)
 
+    # -- prefix cache ---------------------------------------------------------
+    def _prefix_attach(self, req: Request) -> None:
+        """Map the longest cached page-prefix of this request's source
+        tokens read-only into its page list (one refcount per page, charged
+        nothing else).  On a FULL hit the tail page would be written by the
+        recomputed last token — the engine needs its logits to sample — so
+        that one page is forked copy-on-write: a fresh page (charged to the
+        request) gets a device copy of the shared page and replaces it in
+        the request's table; the shared original is never written."""
+        src = self._src(req)
+        self._attached.add(req.rid)
+        pages = self.prefix.acquire(req.rid, src)
+        n_cached = len(pages) * self.cfg.page_size
+        m = self.metrics
+        m.prefix_lookups += 1
+        m.prefix_hits += bool(pages)
+        m.prefix_lookup_tokens += len(src)
+        m.prefix_hit_tokens += min(n_cached, len(src))
+        tally = m.prefix_by_tenant.setdefault(req.tenant or "-", [0, 0])
+        tally[0] += min(n_cached, len(src))
+        tally[1] += len(src)
+        if pages and n_cached >= len(src):
+            shared_tail = pages[-1]
+            self.pager.release_one(req.rid, shared_tail)
+            if self.pager.ensure(req.rid, n_cached):  # ONE fresh fork page
+                fork = self.pager.owned(req.rid)[-1]
+                self.cache = self._jit_copy_page(self.cache,
+                                                 self._dev_i32(shared_tail),
+                                                 self._dev_i32(fork))
+                self.metrics.dispatches += 1
+                self.metrics.prefix_cow_forks += 1
+                n_cached = len(src) - 1
+            else:  # pool too tight to fork: cache one page less instead
+                n_cached -= self.cfg.page_size
+        req.n_cached = min(n_cached, max(len(src) - 1, 0))
+        self.metrics.prefix_cached_tokens += req.n_cached
+
+    def _prefix_insert(self, req: Request, processed: int) -> None:
+        """Register every *full* page of ``req``'s processed tokens in the
+        radix tree (pages it matched at attach time are already there —
+        first writer wins).  Called on prefill completion and again when a
+        request leaves its slot (finish or preemption), so decoded turns
+        become hittable history for multi-turn continuations."""
+        ps = self.cfg.page_size
+        n_full = (processed // ps) * ps
+        if n_full:
+            new = self.prefix.insert(self._src(req)[:n_full],
+                                     self.pager.owned(req.rid))
+            self.metrics.prefix_inserted_pages += new
+
+    def _ensure_or_evict(self, rid: int, n_tokens: int) -> bool:
+        """``pager.ensure`` that evicts cold prefix-cache entries (LRU
+        refcount-1 leaves) before reporting shortage — clean frees beat
+        preempting a live request."""
+        if self.pager.ensure(rid, n_tokens):
+            return True
+        if self.prefix is not None:
+            short = (self.pager.pages_for(n_tokens)
+                     - len(self.pager.owned(rid)) - self.pager.free_pages)
+            if short > 0:
+                freed = self.prefix.evict(short)
+                self.metrics.prefix_evicted_pages += freed
+                if freed >= short:
+                    return self.pager.ensure(rid, n_tokens)
+        return False
+
     # -- paged bookkeeping ----------------------------------------------------
     def _ptab_row(self, rid: int) -> np.ndarray:
         """One (max_pages,) page-table row for ``rid``'s held pages, in
@@ -679,6 +833,12 @@ class ServeEngine:
         so the now-garbage decode row writes somewhere harmless."""
         self.free_slots.append(slot)
         if self.paged:
+            if self.prefix is not None:
+                # full pages of what this request actually processed stay
+                # hittable (multi-turn history / cheap preemption resume):
+                # the cache's refcounts keep them alive past the release
+                self._prefix_insert(req, int(self._lengths[slot]))
+                self._attached.discard(req.rid)
             self.pager.release(req.rid)
             self._ptab[slot] = 0
             self._ptab_dirty = True
@@ -709,7 +869,7 @@ class ServeEngine:
             if req is None:
                 continue
             need = int(self._lengths[slot]) + 1
-            while not self.pager.ensure(req.rid, need):
+            while not self._ensure_or_evict(req.rid, need):
                 victims = [s for s, r in self.active.items()
                            if r.rid != req.rid]
                 if not victims:
@@ -816,6 +976,10 @@ class ServeEngine:
         install(req, slot, row)
         self._free_rows.append(row)
         self._lengths[slot] = src_len
+        if self.prefix is not None:
+            # insert on prefill completion: every full page of the prompt
+            # becomes hittable while this request is still decoding
+            self._prefix_insert(req, src_len)
         if (len(req.output) >= req.max_new_tokens
                 or (req.eos_id is not None and tok == req.eos_id)):
             req.state = "done"
@@ -981,6 +1145,10 @@ class ServeEngine:
                 self._decode_step()
         if self.debug_guards:
             self._assert_no_retrace()
+            if self.paged:
+                self.pager.check()  # refcount / free-list invariant audit
+            if self.prefix is not None:
+                self.prefix.check()
         self.metrics.end_t = time.perf_counter()
         self.metrics.occupancy_sum += len(self.active) / self.cfg.max_slots
         m = self.metrics
@@ -995,6 +1163,9 @@ class ServeEngine:
             cap_tokens = self.pager.usable_pages * self.cfg.page_size
             m.pages_in_use_peak = max(m.pages_in_use_peak,
                                       self.pager.pages_in_use)
+            if self.prefix is not None:
+                m.prefix_shared_pages_peak = max(m.prefix_shared_pages_peak,
+                                                 self.pager.shared_pages)
         else:
             cap_tokens = self.cfg.max_slots * self.cfg.max_seq
         m.kv_util_sum += used / cap_tokens

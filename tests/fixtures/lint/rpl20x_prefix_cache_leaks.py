@@ -1,0 +1,30 @@
+"""Seeded violations: implicit device->host syncs inside the prefix-cache
+entry points.  The class is named ``PrefixCache`` so the reachability walk
+seeds from ``lookup`` / ``insert`` exactly as it does for the real radix
+tree (which must stay pure host bookkeeping — any device sync in the
+lookup path serializes every admission against the device stream)."""
+import numpy as np
+
+
+class PrefixCache:
+    def __init__(self):
+        self.page_of = [0] * 16
+
+    def lookup(self, tokens_dev):
+        n = int(tokens_dev[0])  # EXPECT: RPL202
+        head = self.page_of[tokens_dev[1]]  # EXPECT: RPL204
+        return n + head
+
+    def insert(self, tokens_dev):
+        return self._register(tokens_dev)
+
+    def _register(self, tokens_dev):
+        host = np.asarray(tokens_dev)  # EXPECT: RPL203
+        total = tokens_dev.sum().item()  # EXPECT: RPL201
+        for t in tokens_dev:  # EXPECT: RPL204
+            total += int(t)  # EXPECT: RPL202
+        return total + int(host[0])
+
+    def audit(self, tokens_dev):
+        # NOT reachable from an entry point: syncs here are fine
+        return tokens_dev.sum().item()

@@ -1,0 +1,99 @@
+"""Trace-replay workload generator: seeded determinism, JSON round trip,
+multi-tenant template / multi-turn structure, bursty arrivals, and a live
+replay through the serving engine with SLO/goodput accounting."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import build_model
+from repro.serving import (EngineConfig, ServeEngine, TraceConfig,
+                           generate_trace, replay, smoke_config,
+                           trace_from_json, trace_to_json)
+
+from conftest import tiny_dense_spec
+
+CFG = TraceConfig(n_requests=24, seed=3)
+
+
+def test_trace_deterministic_and_seed_sensitive():
+    assert generate_trace(CFG) == generate_trace(CFG)
+    assert generate_trace(CFG) != generate_trace(
+        dataclasses.replace(CFG, seed=4))
+
+
+def test_trace_json_round_trip():
+    trace = generate_trace(CFG)
+    assert trace_from_json(trace_to_json(trace, CFG)) == trace
+    assert trace_from_json(trace_to_json(trace)) == trace  # config optional
+    with pytest.raises(ValueError, match="version"):
+        trace_from_json('{"version": 99, "requests": []}')
+
+
+def test_trace_structure():
+    trace = generate_trace(CFG)
+    roots = [t for t in trace if t.parent is None]
+    turns = [t for t in trace if t.parent is not None]
+    assert len(roots) == CFG.n_requests
+    assert turns, "multi_turn_p=0.4 over 24 roots should spawn follow-ups"
+    arrivals = [t.arrival_s for t in roots]
+    assert arrivals == sorted(arrivals) and arrivals[0] > 0.0
+    # tenants share fixed templates: same template_id -> same token prefix
+    by_tmpl: dict[str, tuple] = {}
+    for t in roots:
+        lo = CFG.template_tokens[0]
+        head = t.prompt[:lo]
+        assert by_tmpl.setdefault(t.template_id, head) == head
+    assert len(by_tmpl) == CFG.n_tenants * CFG.templates_per_tenant
+    for t in turns:
+        parent = trace[t.parent]
+        assert t.turn == parent.turn + 1 <= CFG.max_turns
+        assert t.tenant == parent.tenant
+        assert t.arrival_s > parent.arrival_s  # lands after + think time
+        assert len(t.prompt) < CFG.suffix_tokens[1]  # new-turn tokens only
+
+
+def test_plain_poisson_degenerates_at_burst_factor_one():
+    cfg = dataclasses.replace(CFG, burst_factor=1.0)
+    trace = generate_trace(cfg)
+    assert len([t for t in trace if t.parent is None]) == cfg.n_requests
+
+
+def test_smoke_config_shrinks():
+    small = smoke_config(CFG)
+    assert small.n_requests < CFG.n_requests
+    assert small.seed == CFG.seed  # the driving seed is preserved
+    assert len(generate_trace(small)) < len(generate_trace(CFG))
+
+
+def test_replay_on_engine_reports_slo_and_goodput():
+    spec = tiny_dense_spec()
+    model = build_model(spec, mesh=None, param_dtype=jnp.float32,
+                        compute_dtype=jnp.float32)
+    params = model.init(jax.random.key(7))
+    eng = ServeEngine(model, params,
+                      EngineConfig(max_slots=3, max_seq=64, chunk_size=8,
+                                   prefill_rows=2, cache_layout="paged",
+                                   page_size=8, unified=True),
+                      rng=jax.random.key(1))
+    trace = generate_trace(smoke_config(TraceConfig(seed=0, vocab=spec.vocab)))
+    summary, reqs = replay(eng, trace, ttft_slo_s=30.0, tpot_slo_s=30.0)
+    assert all(r.state == "done" for r in reqs)
+    assert summary.n_requests == len(trace)
+    assert summary.throughput_tok_s > 0
+    assert 0.0 <= summary.slo_attainment <= 1.0
+    # generous SLOs on a tiny model: everything attains, goodput == thrpt
+    assert summary.slo_attainment == 1.0
+    assert summary.goodput_tok_s == summary.throughput_tok_s
+    assert summary.engine["requests_done"] == len(trace)
+    assert set(summary.by_tenant) == {t.tenant for t in trace}
+    for tally in summary.by_tenant.values():
+        assert tally["attained"] == tally["requests"]
+    # continuations decoded with their parent's full history as context
+    for i, t in enumerate(trace):
+        if t.parent is not None:
+            par = reqs[t.parent]
+            want = list(par.prompt) + list(par.output) + list(t.prompt)
+            assert reqs[i].prompt == want

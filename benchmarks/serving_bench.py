@@ -21,6 +21,8 @@ trajectory (tokens/s, TTFT, TPOT, slot occupancy per cell).
         # asserted, SLO attainment + goodput reported for both
     PYTHONPATH=src python benchmarks/serving_bench.py --compare-prefix \
         --out artifacts/benchmarks/prefix_cache.json  # prefix-cache win
+    PYTHONPATH=src python benchmarks/serving_bench.py --compare-disagg \
+        --out artifacts/benchmarks/disagg.json  # P/D disaggregation
 
 Every cell reports peak KV bytes and cache utilization alongside
 throughput/latency (``kv_reserved_bytes`` / ``kv_peak_bytes`` /
@@ -415,6 +417,119 @@ def compare_prefix(sc, args) -> dict:
     return out
 
 
+def compare_disagg(sc, args) -> dict:
+    """Unified colocated engine vs the live two-pool ``DisaggCluster`` on
+    an identical request set: the same prompts are served by one unified
+    token-packed engine (prefill and decode share slots and pages) and by
+    the disaggregated cluster (prefill pool -> page-granular KV migration
+    -> decode pool), greedy outputs are asserted token-identical, and
+    both sides report TTFT / TPOT / goodput.  The cluster runs over an
+    accounting-only simulated link (``time_scale=0``), so the migration
+    stats price the analytical inter-pool bandwidth term without gating
+    wall-clock.  The closed loop then runs the *same* Scenario in
+    ``mode="disaggregated"`` through the analytical backend and the
+    engine backend and reports the ``repro.scenario.compare`` error,
+    including the predicted-vs-measured KV-migration seconds."""
+    import dataclasses
+
+    from repro.scenario.engine_backend import lower_model
+    from repro.serving import (ClusterMetrics, DisaggCluster,
+                               DisaggClusterConfig, MigrationLink)
+
+    spec, model, params = lower_model(sc.model)
+    ps = page_size(args, sc)
+    chunk = min(args.chunk, args.max_seq)
+    rng = np.random.default_rng(args.seed)
+    lo, hi = MIXES["mixed"]
+    prompts = [[int(t) for t in rng.integers(0, spec.vocab, size=int(r))]
+               for r in rng.integers(lo, hi, size=args.requests)]
+
+    def requests():
+        # engines mutate Request in place: each side gets fresh clones
+        return [Request(prompt=list(p), max_new_tokens=args.max_new)
+                for p in prompts]
+
+    out = {"n_requests": args.requests, "max_new_tokens": args.max_new,
+           "max_seq": args.max_seq, "page_size": ps, "chunk_size": chunk,
+           "prefill_rows": args.prefill_rows, "decode_slots": args.slots,
+           "link_bandwidth_B_s": args.link_bw}
+    outputs: dict[str, list] = {}
+
+    cfg = EngineConfig(max_slots=args.slots, max_seq=args.max_seq,
+                       chunk_size=chunk, prefill_rows=args.prefill_rows,
+                       unified=True, cache_layout="paged", page_size=ps,
+                       n_pages=args.n_pages)
+    eng = ServeEngine(model, params, cfg, rng=jax.random.key(1))
+    eng.serve([Request(prompt=[1, 2, 3, 4, 5], max_new_tokens=2)])
+    eng.metrics = EngineMetrics()
+    eng.pager.peak_in_use = eng.pager.pages_in_use
+    reqs = eng.serve(requests())
+    assert all(r.state == "done" for r in reqs)
+    outputs["unified"] = [list(r.output) for r in reqs]
+    cell = eng.metrics.summary(reqs)
+    cell.update(eng.kv_stats())
+    cell["goodput_tok_s"] = cell["tokens_per_s"]
+    out["unified"] = cell
+
+    ccfg = DisaggClusterConfig(
+        max_seq=args.max_seq, page_size=ps, chunk_size=chunk,
+        prefill_rows=args.prefill_rows, decode_slots=args.slots,
+        link=MigrationLink(bandwidth=args.link_bw))
+    cl = DisaggCluster(model, params, ccfg, rng=jax.random.key(1))
+    cl.serve([Request(prompt=[1, 2, 3, 4, 5], max_new_tokens=2)])
+    # the warmup compiled both pools' programs and pushed one migration
+    # through the link: re-base every lifetime counter so the measured
+    # window covers only the benchmark requests
+    cl.metrics = ClusterMetrics()
+    for e in (cl.prefill_eng, cl.decode_eng):
+        e.metrics = EngineMetrics()
+        e.pager.peak_in_use = e.pager.pages_in_use
+    ch = cl.channel
+    ch.migrations = ch.migrated_pages = ch.migrated_bytes = 0
+    ch.transfer_s_total = ch.wait_s_total = 0.0
+    ch.pending_peak = 0
+    cl.migration_s.clear()
+    creqs = cl.serve(requests())
+    assert all(r.state == "done" for r in creqs)
+    outputs["disaggregated"] = [list(r.output) for r in creqs]
+    dcell = cl.summary(creqs)
+    dcell["kv"] = cl.kv_stats()
+    out["disaggregated"] = dcell
+
+    # greedy token identity: migration must never change what is decoded
+    assert outputs["unified"] == outputs["disaggregated"], \
+        "disaggregated cluster diverged from the unified engine"
+    out["token_identity"] = True
+    out["goodput_win"] = (dcell["goodput_tok_s"]
+                          / max(out["unified"]["goodput_tok_s"], 1e-12))
+
+    # predicted-vs-measured through the Scenario backends, including the
+    # KV-migration term the disaggregated mode adds to TTFT
+    from repro.scenario import compare, run as run_scenarios
+    sc_d = sc.replace(mode="disaggregated", opt=dataclasses.replace(
+        sc.opt, paged_kv=True, kv_page_size=ps))
+    pred = run_scenarios([sc_d], backend="analytical")[0]
+    meas = run_scenarios(
+        [sc_d], backend="engine",
+        engine_kw=dict(max_slots=args.slots, max_seq=args.max_seq,
+                       page_size=ps, n_requests=args.requests))[0]
+    errs = compare(pred, meas)
+    ex = meas.extra or {}
+    out["analytical"] = {
+        "status": meas.status,
+        "predicted_ttft_s": pred.ttft_s,
+        "measured_ttft_s": meas.ttft_s,
+        "predicted_tpot_s": pred.tpot_s,
+        "measured_tpot_s": meas.tpot_s,
+        "predicted_kv_transfer_s": ex.get("predicted_kv_transfer_s"),
+        "measured_kv_transfer_s": ex.get("measured_kv_transfer_s"),
+        "plan": ex.get("plan"),
+        "colocated": ex.get("colocated"),
+        "compare": errs,
+    }
+    return out
+
+
 def compare_speculative(sc, args) -> dict:
     """Per-token-sync vs batched-sync speculative decoding on identical
     prompts (self-draft): the decoder's draft loop used to block on the
@@ -531,6 +646,16 @@ def main() -> None:
                          "rate x mix sweep (token-identity asserted; "
                          "records the tokens/s win and the "
                          "predicted-vs-measured chunked TPOT error)")
+    ap.add_argument("--compare-disagg", action="store_true",
+                    help="unified colocated engine vs the live two-pool "
+                         "disaggregated cluster on identical prompts "
+                         "(token-identity asserted; records migration "
+                         "traffic, per-pool occupancy and the "
+                         "predicted-vs-measured error incl. the "
+                         "KV-migration term)")
+    ap.add_argument("--link-bw", type=float, default=100e9,
+                    help="simulated inter-pool link bandwidth (B/s) for "
+                         "--compare-disagg migration accounting")
     ap.add_argument("--speculative", action="store_true",
                     help="per-token-sync vs batched-sync speculative "
                          "decoding on identical prompts (records the "
@@ -580,7 +705,8 @@ def main() -> None:
         import dataclasses
         sc = build_scenario(args)
         paged = (args.paged or args.unified or args.compare_unified
-                 or args.compare_prefix or args.trace is not None)
+                 or args.compare_prefix or args.compare_disagg
+                 or args.trace is not None)
         if paged and not sc.opt.paged_kv:
             sc = sc.replace(opt=dataclasses.replace(
                 sc.opt, paged_kv=True, kv_page_size=page_size(args, sc)))
@@ -632,6 +758,34 @@ def main() -> None:
                   f"ttft error {err['ttft_error']}, "
                   f"max-concurrency error {err['max_concurrency_error']}",
                   file=sys.stderr)
+        if args.out:
+            Path(args.out).write_text(text)
+            print(f"wrote {args.out}", file=sys.stderr)
+        return
+
+    if args.compare_disagg:
+        sc = scenario_for_run()
+        res = compare_disagg(sc, args)
+        report = {"bench": "serving_bench/compare_disagg",
+                  "scenario": sc.to_dict(), "smoke": args.smoke,
+                  "result": res}
+        text = json.dumps(report, indent=2)
+        print(text)
+        d, u, a = res["disaggregated"], res["unified"], res["analytical"]
+        print(f"disaggregated vs unified (token-identical): "
+              f"{d['migrations']} migrations, "
+              f"{d['migrated_bytes']} B over the link, "
+              f"ttft {u['ttft_s_mean'] * 1e3:.1f} -> "
+              f"{d['ttft_incl_migration_s_mean'] * 1e3:.1f} ms incl. "
+              f"migration, goodput {u['goodput_tok_s']:.1f} -> "
+              f"{d['goodput_tok_s']:.1f} tok/s", file=sys.stderr)
+        mkv = a["measured_kv_transfer_s"]
+        pkv = a["predicted_kv_transfer_s"]
+        print(f"analytical loop ({a['status']}): "
+              f"kv transfer predicted "
+              f"{pkv if pkv is None else f'{pkv:.3e}'} s vs measured "
+              f"{mkv if mkv is None else f'{mkv:.3e}'} s, "
+              f"ttft error {a['compare'].get('ttft_s')}", file=sys.stderr)
         if args.out:
             Path(args.out).write_text(text)
             print(f"wrote {args.out}", file=sys.stderr)

@@ -95,4 +95,12 @@ python benchmarks/serving_bench.py --trace --smoke > /dev/null
 #  asserts the greedy outputs are token-identical before reporting the
 #  hit-rate / TTFT / goodput win)
 
+echo "== disaggregated serving: unified-vs-cluster equivalence smoke =="
+python benchmarks/serving_bench.py --compare-disagg --smoke > /dev/null
+# (compare_disagg serves identical prompts through a unified colocated
+#  engine and the live two-pool prefill/decode cluster, asserts the
+#  greedy outputs are token-identical across the page-granular KV
+#  migration, and closes the analytical loop on the inter-pool
+#  bandwidth term)
+
 echo "CI OK"

@@ -49,6 +49,18 @@ ENTRY_POINTS: tuple[tuple[str, str], ...] = (
     ("PrefixCache", "lookup"),
     ("PrefixCache", "acquire"),
     ("PrefixCache", "insert"),
+    # P/D disaggregation hot path: the cluster step, the migration
+    # channel's pump, the cross-pool page copy, and the engine-side
+    # import hooks all run between (or instead of) engine dispatches —
+    # a stray sync in any of them serializes both pools
+    ("DisaggCluster", "step"),
+    ("DisaggCluster", "run"),
+    ("DisaggCluster", "serve"),
+    ("DisaggCluster", "_copy_pages"),
+    ("KvMigrationChannel", "submit"),
+    ("KvMigrationChannel", "pump"),
+    ("ServeEngine", "reserve_imported"),
+    ("ServeEngine", "install_imported"),
 )
 
 #: parameter names that carry device arrays into hot-path helpers

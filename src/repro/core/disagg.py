@@ -10,7 +10,8 @@ For each candidate (tp_p, tp_d, pool split):
 
   prefill capacity  : requests/s one prefill group sustains = 1 / TTFT
   decode capacity   : requests/s one decode group sustains =
-                      B_max / (tau_d * TPOT(B_max)), B_max bounded by HBM
+                      B_max / (tau_d [output tokens] * TPOT(B_max) [s/tok]),
+                      B_max bounded by HBM
   kv transfer       : KV(tau_p) bytes / inter-pool BW, added to TTFT
   goodput           : min(prefill_rate, decode_rate) subject to both SLOs
 
@@ -149,6 +150,26 @@ def plan_scenario(scenario) -> list[DisaggPlan]:
     return plan_disaggregated(scenario.resolve_model(),
                               scenario.resolve_platform(),
                               scenario.workload, scenario.opt, **kw)
+
+
+def plan_with_baseline(spec: ModelSpec, platform: Platform, wl: Workload,
+                       opt: Optimizations | None = None,
+                       total_npus: int | None = None,
+                       inter_pool_bw: float = 100e9,
+                       tp_options: tuple[int, ...] = (1, 2, 4, 8, 16, 32),
+                       colocated_tp: int = 8, colocated_chunk: int = 512,
+                       ) -> tuple[list[DisaggPlan], dict]:
+    """One call returning both sides of the crossover the module docstring
+    promises: the ranked disaggregation plans *and* the colocated chunked
+    baseline on the same fleet — so callers (the engine lowering, the
+    bench) never recompute the baseline out-of-band."""
+    plans = plan_disaggregated(spec, platform, wl, opt,
+                               total_npus=total_npus,
+                               inter_pool_bw=inter_pool_bw,
+                               tp_options=tp_options)
+    co = colocated_goodput(spec, platform, wl, opt, total_npus=total_npus,
+                           tp=colocated_tp, chunk=colocated_chunk)
+    return plans, co
 
 
 def colocated_goodput(spec: ModelSpec, platform: Platform, wl: Workload,

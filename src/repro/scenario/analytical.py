@@ -165,15 +165,14 @@ def _speculative(sc: Scenario, spec, plat) -> tuple[Report, dict]:
 
 
 def _disaggregated(sc: Scenario, spec, plat) -> tuple[Report, dict]:
-    from ..core.disagg import colocated_goodput, plan_disaggregated
+    from ..core.disagg import plan_with_baseline
     d = sc.disaggregated
-    plans = plan_disaggregated(spec, plat, sc.workload, sc.opt,
-                               total_npus=d.total_npus,
-                               inter_pool_bw=d.inter_pool_bw,
-                               tp_options=d.tp_options)
-    co = colocated_goodput(spec, plat, sc.workload, sc.opt,
-                           total_npus=d.total_npus, tp=d.colocated_tp,
-                           chunk=d.colocated_chunk)
+    plans, co = plan_with_baseline(spec, plat, sc.workload, sc.opt,
+                                   total_npus=d.total_npus,
+                                   inter_pool_bw=d.inter_pool_bw,
+                                   tp_options=d.tp_options,
+                                   colocated_tp=d.colocated_tp,
+                                   colocated_chunk=d.colocated_chunk)
     if not plans:
         rep = Report(scenario=sc, backend="analytical", status="infeasible",
                      error="no feasible disaggregated split",

@@ -21,7 +21,15 @@ Lowering rules:
   * ``mode``: monolithic runs the prompt as one prefill chunk, chunked
     uses ``ChunkedSpec.chunk`` as the engine chunk size, speculative runs
     the real draft/target :class:`SpeculativeDecoder`.  Disaggregated
-    serving has no single-host execution and reports ``unsupported``.
+    lowers to a live two-engine :class:`~repro.serving.cluster.
+    DisaggCluster` — a unified chunked prefill engine streaming finished
+    KV pages over a bandwidth/latency-simulated link (priced at the
+    DisaggSpec's ``inter_pool_bw``) into a paged decode engine.  The
+    prefill-rows:decode-slots split maps the analytical planner's best
+    xPU:yPU ratio onto ``max_slots`` engine units (override with
+    ``engine_kw["disagg_split"]=(rows, slots)``), and the Report's TTFT
+    *includes* the simulated migration time, matching the analytical
+    ``ttft = prefill + kv_transfer`` term.
   * ``engine_kw["unified"]=True`` lowers to the unified token-packed
     engine step (one jitted dispatch per iteration, prefill K/V written
     directly to pages); it forces the paged layout.  This is how the
@@ -56,13 +64,18 @@ from .scenario import Scenario
 
 #: Scenario modes this backend can lower to a live run.  Refusal paths
 #: quote this list so an unsupported-mode Report is self-explanatory.
-LOWERABLE_MODES = ("monolithic", "chunked", "speculative")
+LOWERABLE_MODES = ("monolithic", "chunked", "speculative", "disaggregated")
 
 #: engine-lowering defaults, overridable via ``run(..., engine_kw=...)``
 DEFAULTS = dict(max_slots=8, max_seq=256, prefill_rows=2, max_prompt=64,
                 max_new=32, n_requests=None, seed=0, temperature=0.0,
                 cache_layout=None, page_size=None, n_pages=None,
-                kv_budget_bytes=None, unified=False, prefix_cache=False)
+                kv_budget_bytes=None, unified=False, prefix_cache=False,
+                # -- disaggregated-mode knobs --------------------------------
+                disagg_split=None,  # (prefill_rows, decode_slots) override
+                prefill_slots=1, decode_prefill_rows=1,
+                prefill_pages=None, decode_pages=None,
+                link_latency_s=0.0, link_time_scale=0.0)
 
 
 def lower_model(ref):
@@ -110,11 +123,8 @@ def evaluate(sc: Scenario, **engine_kw) -> Report:
     if sc.mode not in LOWERABLE_MODES:
         return Report(
             scenario=sc, backend="engine", status="unsupported",
-            error=f"scenario mode {sc.mode!r} has no engine lowering: "
-                  "disaggregated serving needs a prefill host and a "
-                  "decode host, and a single-host engine cannot measure "
-                  "the KV handoff it exists to study; lowerable modes "
-                  f"are {', '.join(LOWERABLE_MODES)}")
+            error=f"scenario mode {sc.mode!r} has no engine lowering; "
+                  f"lowerable modes are {', '.join(LOWERABLE_MODES)}")
     try:
         spec, model, params = lower_model(sc.model)
     except (ValueError, TypeError) as e:
@@ -123,6 +133,8 @@ def evaluate(sc: Scenario, **engine_kw) -> Report:
     try:
         if sc.mode == "speculative":
             return _run_speculative(sc, spec, model, params, kw)
+        if sc.mode == "disaggregated":
+            return _run_disaggregated(sc, spec, model, params, kw)
         return _run_engine(sc, spec, model, params, kw)
     except Exception as e:  # noqa: BLE001 - sweeps must survive bad cells
         return Report(scenario=sc, backend="engine", status="error",
@@ -256,6 +268,123 @@ def _run_engine(sc: Scenario, spec, model, params, kw: dict) -> Report:
                "model": spec.name})
 
 
+def _run_disaggregated(sc: Scenario, spec, model, params,
+                       kw: dict) -> Report:
+    """Lower ``mode='disaggregated'`` to a live two-engine
+    :class:`~repro.serving.cluster.DisaggCluster`.
+
+    The analytical planner runs first — on the *clamped* workload, so
+    its KV-transfer term prices the same tokens the cluster actually
+    migrates — and its best xPU:yPU ratio picks the prefill-rows :
+    decode-slots split of the ``max_slots`` engine-unit budget (the same
+    budget a unified engine would spend on decode slots, which is what
+    makes the head-to-head fair).  The simulated link runs at the
+    DisaggSpec's ``inter_pool_bw``.  Configurations the cluster
+    genuinely cannot run raise a ValueError naming the missing knob."""
+    import dataclasses
+    import jax
+    from ..core.disagg import plan_with_baseline
+    from ..serving.cluster import (DisaggCluster, DisaggClusterConfig,
+                                   MigrationLink, pool_split_from_plan)
+    from .scenario import DisaggSpec
+
+    geo = _geometry(sc, kw)
+    budget = int(kw["max_slots"])
+    if budget < 2:
+        raise ValueError(
+            "mode 'disaggregated' needs engine_kw['max_slots'] >= 2: the "
+            "pool split assigns at least one engine unit to each pool "
+            f"(got max_slots={budget})")
+    if any(k == "ssm" for k in spec.layer_kinds()):
+        raise ValueError(
+            f"mode 'disaggregated' cannot lower {spec.name!r}: the "
+            "prefill engine needs unified=True (direct-to-page K/V "
+            "writes feed the migration channel) and the packed step "
+            "supports attention-only stacks — SSM layers have no "
+            "packed-segment forward; use an attention-only model or "
+            "mode='chunked' with cache_layout='dense'")
+    if spec.attn.kind == "swa":
+        raise ValueError(
+            f"mode 'disaggregated' cannot lower {spec.name!r}: the "
+            "unified prefill step has no sliding-window masking in the "
+            "ragged kernel yet; use a full-attention model")
+    d = sc.disaggregated if sc.disaggregated is not None else DisaggSpec()
+    wl = dataclasses.replace(sc.workload, tau_p=geo["prompt_len"],
+                             tau_d=geo["max_new"])
+    plans, co = plan_with_baseline(spec, sc.resolve_platform(), wl, sc.opt,
+                                   total_npus=d.total_npus,
+                                   inter_pool_bw=d.inter_pool_bw,
+                                   tp_options=d.tp_options,
+                                   colocated_tp=d.colocated_tp,
+                                   colocated_chunk=d.colocated_chunk)
+    best = plans[0] if plans else None
+    if kw["disagg_split"] is not None:
+        rows, slots = (int(x) for x in kw["disagg_split"])
+        if rows < 1 or slots < 1:
+            raise ValueError(
+                f"engine_kw['disagg_split'] needs both sides >= 1, got "
+                f"({rows}, {slots})")
+    else:
+        rows, slots = pool_split_from_plan(best, budget)
+    chunk = max(1, min(sc.chunked.chunk if sc.chunked is not None else 16,
+                       geo["prompt_len"]))
+    paging = _paged_lowering(sc, spec, geo, dict(kw, unified=True))
+    decode_pages = kw["decode_pages"]
+    if decode_pages is None:
+        # the §VI-A HBM-budget pool, clamped to what `slots` can address
+        decode_pages = min(paging["n_pages"],
+                           slots * (geo["max_seq"] // paging["page_size"])
+                           + 1)
+    link = MigrationLink(bandwidth=d.inter_pool_bw,
+                         latency_s=float(kw["link_latency_s"]),
+                         time_scale=float(kw["link_time_scale"]))
+    ccfg = DisaggClusterConfig(
+        max_seq=geo["max_seq"], page_size=paging["page_size"],
+        chunk_size=chunk, prefill_rows=rows,
+        prefill_slots=int(kw["prefill_slots"]),
+        prefill_pages=kw["prefill_pages"], decode_slots=slots,
+        decode_prefill_rows=int(kw["decode_prefill_rows"]),
+        decode_pages=decode_pages, link=link)
+    cluster = DisaggCluster(model, params, ccfg,
+                            rng=jax.random.key(int(kw["seed"])))
+    reqs = _make_requests(sc, spec, geo, kw)
+    cluster.serve(reqs)
+    summary = cluster.summary(reqs, ttft_slo_s=sc.workload.ttft_slo,
+                              tpot_slo_s=sc.workload.tpot_slo)
+    done = [r for r in reqs if r.state == "done"]
+    latency = (sum(r.finish_t - r.submit_t for r in done) / len(done)
+               if done else None)
+    # client-observed TTFT includes the simulated migration time — the
+    # measured counterpart of the analytical prefill + kv_transfer term
+    ttft = summary.get("ttft_incl_migration_s_mean")
+    tpot = summary.get("tpot_s_mean")
+    return Report(
+        scenario=sc, backend="engine", status="ok",
+        ttft_s=ttft, tpot_s=tpot, latency_s=latency,
+        throughput_tok_s=summary["tokens_per_s"],
+        max_concurrency=summary["decode"].get("peak_active"),
+        fits_memory=True,
+        meets_slo=_meets(sc, {"ttft_s_mean": ttft, "tpot_s_mean": tpot}),
+        extra={"engine": summary, "lowering": geo,
+               "kv": cluster.kv_stats(),
+               "engine_config": {
+                   "budget_slots": budget, "prefill_rows": rows,
+                   "decode_slots": slots, "chunk_size": chunk,
+                   "max_seq": geo["max_seq"],
+                   "decode_pages": decode_pages,
+                   "link_bandwidth": d.inter_pool_bw,
+                   "link_latency_s": link.latency_s,
+                   "link_time_scale": link.time_scale, **paging},
+               "plan": dataclasses.asdict(best) if best else None,
+               "colocated": co,
+               "goodput_tok_s": summary["goodput_tok_s"],
+               "predicted_kv_transfer_s": (best.kv_transfer_s
+                                           if best else None),
+               "measured_kv_transfer_s":
+                   summary["migration_transfer_s_mean"],
+               "model": spec.name})
+
+
 def _run_speculative(sc: Scenario, spec, model, params, kw: dict) -> Report:
     from ..serving.speculative import SpeculativeDecoder
 
@@ -270,7 +399,8 @@ def _run_speculative(sc: Scenario, spec, model, params, kw: dict) -> Report:
                   "into the unified ragged step); lowerable today are "
                   f"modes {', '.join(LOWERABLE_MODES)} — 'speculative' "
                   "only with the dense layout, 'monolithic'/'chunked' "
-                  "with dense, paged or unified")
+                  "with dense, paged or unified, 'disaggregated' on the "
+                  "unified paged cluster")
 
     d_spec, d_model, d_params = lower_model(sc.speculative.draft)
     if d_spec.vocab != spec.vocab:

@@ -1,8 +1,12 @@
 """Serving substrate: continuous-batching engine (batched chunked prefill,
 device-side sampling, dense or paged KV cache), page allocator, radix-tree
-prefix cache, trace-replay workload generator, speculative decoding, beam
+prefix cache, disaggregated prefill/decode cluster with page-granular KV
+migration, trace-replay workload generator, speculative decoding, beam
 search, sampling."""
 
+from .cluster import (ClusterMetrics, DisaggCluster, DisaggClusterConfig,
+                      KvMigrationChannel, MigrationLink,
+                      pool_split_from_plan)
 from .engine import EngineConfig, EngineMetrics, Request, ServeEngine
 from .paging import PageAllocator, pages_for
 from .prefix_cache import PrefixCache, PrefixCacheStats
@@ -11,6 +15,8 @@ from .workload import (ReplaySummary, TraceConfig, TraceRequest,
                        trace_to_json)
 
 __all__ = ["EngineConfig", "EngineMetrics", "Request", "ServeEngine",
+           "ClusterMetrics", "DisaggCluster", "DisaggClusterConfig",
+           "KvMigrationChannel", "MigrationLink", "pool_split_from_plan",
            "PageAllocator", "pages_for", "PrefixCache", "PrefixCacheStats",
            "TraceConfig", "TraceRequest", "ReplaySummary", "generate_trace",
            "replay", "smoke_config", "trace_from_json", "trace_to_json"]

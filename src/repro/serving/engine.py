@@ -204,6 +204,9 @@ class EngineMetrics:
     preemptions: int = 0  # victims pushed back to the queue (pool ran dry)
     capacity_stops: int = 0  # requests force-finished (no victim available)
     pages_in_use_peak: int = 0
+    # -- P/D disaggregation counters (zero outside a DisaggCluster) ----------
+    exports: int = 0  # prefill completions handed off to a decode pool
+    imports: int = 0  # migrated requests installed into a decode slot
     # -- prefix-cache counters (mirrors of PrefixCacheStats + engine-side) --
     prefix_lookups: int = 0
     prefix_hits: int = 0  # submits whose prompt matched >= 1 cached page
@@ -263,6 +266,9 @@ class EngineMetrics:
             "pages_in_use_peak": self.pages_in_use_peak,
             "kv_used_tokens_peak": self.kv_used_tokens_peak,
         }
+        if self.exports or self.imports:  # only under P/D disaggregation
+            out["exports"] = self.exports
+            out["imports"] = self.imports
         if self.prefix_lookups:  # keep cache-off summaries unchanged
             out.update(
                 prefix_hit_rate=self.prefix_hit_rate,
@@ -341,6 +347,12 @@ class ServeEngine:
         self.active: dict[int, Request] = {}  # slot -> request
         self.free_slots = list(range(config.max_slots))
         self.finished: list[Request] = []
+        # P/D disaggregation hook (set post-construction by DisaggCluster):
+        # called as export_fn(req, src_len, done, now) when a prefill
+        # completes instead of promoting into a local decode slot.  The
+        # request's pages stay owned by its rid until the migration
+        # channel releases them after the cross-pool copy.
+        self.export_fn = None
         self.steps = 0
         self.metrics = EngineMetrics()
 
@@ -650,10 +662,14 @@ class ServeEngine:
         prompt, as long as a decode slot is guaranteed at completion and —
         in the paged layout — the pool has free pages for the prompt plus
         one token of headroom (reserved up front, so concurrent prefills
-        never race for the same pages)."""
+        never race for the same pages).  An exporting engine (P/D
+        disaggregation) never promotes into a local decode slot, so the
+        slot guarantee is waived and admission is bounded by prefill rows
+        and pool pages alone."""
         while (self.queue and self._free_rows
-               and len(self.active) + len(self._prefills)
-               < self.cfg.max_slots):
+               and (self.export_fn is not None
+                    or len(self.active) + len(self._prefills)
+                    < self.cfg.max_slots)):
             req = self.queue[0]
             if self.paged:
                 if self.prefix is not None and req.rid not in self._attached:
@@ -827,6 +843,58 @@ class ServeEngine:
         row[:len(held)] = held
         return row
 
+    # -- P/D import hooks (decode side of a DisaggCluster) --------------------
+    def reserve_imported(self, rid: int, n_tokens: int) -> bool:
+        """Reserve admission for a request whose KV pages are arriving
+        from another engine's pool: allocate pages for ``n_tokens`` under
+        ``rid`` (evicting cold prefix entries if needed) and report
+        whether a decode slot is free to install into.  Pure reservation
+        — ``install_imported`` completes the hand-off after the
+        cross-pool page copy has landed."""
+        if not self.paged:
+            raise ValueError(
+                "imported-page installs need cache_layout='paged'")
+        if not self.free_slots:
+            return False
+        return self._ensure_or_evict(rid, n_tokens)
+
+    def install_imported(self, req: Request, kv_len: int) -> int:
+        """Install a migrated request into a decode slot.  Its pages —
+        already filled under ``req.rid`` by the cross-pool copy — become
+        the slot's page-table row and decode resumes from the request's
+        last sampled token.  Page-table stitching only: the ragged
+        kernel reads migrated pages exactly like home-grown ones."""
+        if not req.output:
+            raise ValueError(f"request {req.rid}: importing with no "
+                             "sampled first token (nothing to decode from)")
+        slot = self.free_slots.pop()
+        req.slot = slot
+        req.state = "decode"
+        self.active[slot] = req
+        self._ptab[slot] = self._ptab_row(req.rid)
+        self._ptab_dirty = True
+        self._dev_ptab = None
+        self._lengths[slot] = kv_len
+        if not self.unified:
+            # the two-dispatch decode reads its write position from the
+            # device-side lengths (the unified path packs host lengths
+            # every step); stitch the slot's length in with its pages
+            cache = self.cache
+            self.cache = ModelCache(
+                layers=cache.layers,
+                lengths=cache.lengths.at[slot].set(kv_len),
+                page_table=cache.page_table)
+        self._tokens[slot, 0] = req.output[-1]
+        self._temps[slot] = req.sampling.temperature
+        self._topks[slot] = req.sampling.top_k
+        self._topps[slot] = req.sampling.top_p
+        # slot churn: every cached device mirror is stale
+        self._dev_sampling = None
+        self._dev_tokens = None
+        self._dev_utokens = None
+        self.metrics.imports += 1
+        return slot
+
     def _release_slot(self, slot: int, req: Request) -> None:
         """Free-on-finish: return the decode slot and (paged) every page
         the request holds; its page-table row falls back to the null page
@@ -971,6 +1039,25 @@ class ServeEngine:
             req.first_token_t = now
         req.output.append(tok)
         self.metrics.generated_tokens += 1
+        if self.export_fn is not None:
+            # P/D hand-off: the request leaves this engine at prefill
+            # completion.  Its pages stay owned by its rid (the migration
+            # channel copies them out and releases them); the prefill row
+            # frees immediately so the next prompt can start.
+            if not self.unified:
+                raise ValueError(
+                    "export_fn needs unified=True: only the packed step "
+                    "writes prefill K/V directly into pages — the dense-"
+                    "scratch path has nothing page-resident to migrate")
+            self._free_rows.append(row)
+            if self.prefix is not None:
+                self._prefix_insert(req, src_len)
+                self._attached.discard(req.rid)
+            self.metrics.exports += 1
+            done = (len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id))
+            self.export_fn(req, src_len, done, now)
+            return
         slot = self.free_slots.pop()
         req.slot = slot
         install(req, slot, row)
@@ -1210,9 +1297,14 @@ class ServeEngine:
                                        * per_token))
         return out
 
+    @property
+    def busy(self) -> bool:
+        """Queued, prefilling, or decoding work pending."""
+        return bool(self.queue or self.active or self._prefills)
+
     def run(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
-            if not (self.queue or self.active or self._prefills):
+            if not self.busy:
                 break
             self.step()
 

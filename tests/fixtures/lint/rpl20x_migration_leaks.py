@@ -1,0 +1,36 @@
+"""Seeded violations: implicit device->host syncs inside the P/D
+migration hot path.  The classes are named ``DisaggCluster`` /
+``KvMigrationChannel`` so the reachability walk seeds from ``step`` /
+``pump`` / ``_copy_pages`` exactly as it does for the real cluster
+(whose migration scheduling must stay pure host bookkeeping — a sync
+between the pump and the engine steps stalls *both* pools)."""
+import numpy as np
+
+
+class KvMigrationChannel:
+    def __init__(self):
+        self.page_of = [0] * 16
+
+    def pump(self, tokens_dev):
+        n = int(tokens_dev[0])  # EXPECT: RPL202
+        head = self.page_of[tokens_dev[1]]  # EXPECT: RPL204
+        return n + head
+
+    def stats(self, tokens_dev):
+        # NOT reachable from an entry point: syncs here are fine
+        return tokens_dev.sum().item()
+
+
+class DisaggCluster:
+    def step(self, logits):
+        return self._route(logits)
+
+    def _route(self, logits):
+        host = np.asarray(logits)  # EXPECT: RPL203
+        total = logits.sum().item()  # EXPECT: RPL201
+        for t in logits:  # EXPECT: RPL204
+            total += int(t)  # EXPECT: RPL202
+        return total + int(host[0])
+
+    def _copy_pages(self, sampled):
+        return float(sampled)  # EXPECT: RPL202

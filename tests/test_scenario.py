@@ -305,14 +305,44 @@ def test_engine_backend_chunked_mode(tiny_spec):
     assert rep.extra["engine"]["prefill_calls"] >= 3  # 12 tokens / 4-chunks
 
 
-def test_engine_backend_unsupported_and_errors(tiny_spec):
+def test_engine_backend_disaggregated_lowers(tiny_spec):
+    """mode='disaggregated' is no longer refused: it lowers to a live
+    two-engine DisaggCluster and reports migration traffic."""
     disagg = _tiny_scenario(tiny_spec, mode="disaggregated")
-    rep, = run([disagg], backend="engine")
+    rep, = run([disagg], backend="engine", engine_kw=ENGINE_KW)
+    assert rep.status == "ok", rep.error
+    eng = rep.extra["engine"]
+    assert eng["migrations"] > 0 and eng["migrated_bytes"] > 0
+    assert eng["requests_done"] == 3
+    cfg = rep.extra["engine_config"]
+    assert cfg["prefill_rows"] >= 1 and cfg["decode_slots"] >= 1
+    assert cfg["prefill_rows"] + cfg["decode_slots"] == cfg["budget_slots"]
+    # planner plumbing: the best plan AND the colocated baseline surface
+    assert rep.extra["colocated"] is not None
+    assert rep.extra["measured_kv_transfer_s"] >= 0
+    assert Report.from_json(rep.to_json()) == rep
+
+
+def test_engine_backend_unsupported_and_errors(tiny_spec):
+    from repro.scenario.engine_backend import LOWERABLE_MODES
+    # every Scenario mode now lowers; the remaining refusal (speculative
+    # + paged) must list all of them
+    assert set(LOWERABLE_MODES) == {"monolithic", "chunked", "speculative",
+                                    "disaggregated"}
+    spec_sc = _tiny_scenario(
+        tiny_spec, mode="speculative",
+        speculative=SpeculativeSpec(draft="llama2-7b", n=2))
+    rep, = run([spec_sc], backend="engine",
+               engine_kw=dict(ENGINE_KW, unified=True))
     assert rep.status == "unsupported"
-    # the refusal names the mode and lists what IS lowerable
-    assert "'disaggregated'" in rep.error
-    for mode in ("monolithic", "chunked", "speculative"):
+    for mode in LOWERABLE_MODES:
         assert mode in rep.error
+    # a split needs >= 2 engine units: the error names the missing knob
+    disagg = _tiny_scenario(tiny_spec, mode="disaggregated")
+    rep, = run([disagg], backend="engine",
+               engine_kw=dict(ENGINE_KW, max_slots=1))
+    assert rep.status == "error"
+    assert "max_slots" in rep.error
     paper = Scenario.make("llama3-70b", use_case="chat", batch=1)
     rep, = run([paper], backend="engine")
     assert rep.status == "error"

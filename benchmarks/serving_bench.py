@@ -23,6 +23,9 @@ trajectory (tokens/s, TTFT, TPOT, slot occupancy per cell).
         --out artifacts/benchmarks/prefix_cache.json  # prefix-cache win
     PYTHONPATH=src python benchmarks/serving_bench.py --compare-disagg \
         --out artifacts/benchmarks/disagg.json  # P/D disaggregation
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python benchmarks/serving_bench.py --compare-tp \
+        --out artifacts/benchmarks/tp_serving.json  # mesh-sharded tp/pp
 
 Every cell reports peak KV bytes and cache utilization alongside
 throughput/latency (``kv_reserved_bytes`` / ``kv_peak_bytes`` /
@@ -293,6 +296,115 @@ def compare_unified(sc, args) -> dict:
         "measured_unified_s": meas.tpot_s,
         "compare": compare(pred, meas),
     }
+    return out
+
+
+def compare_tp(sc, args) -> dict:
+    """Mesh-sharded unified engine across {tp=1, tp=2, tp=4, pp=2} on the
+    same rate x mix sweep: greedy outputs asserted token-identical to the
+    tp=1 engine, the one-dispatch/one-transfer-per-step invariant asserted
+    per host, and per-step collective count / estimated all-reduce bytes
+    recorded next to tokens/s.  Each mesh shape also closes the
+    predicted-vs-measured loop: the same ``Scenario`` with its
+    ``ParallelismConfig`` runs through the analytical and the engine
+    backends and ``compare()`` reports TTFT/TPOT/max-concurrency error —
+    the paper's multi-NPU scaling claims (figs 13/16/17) against a live
+    sharded run."""
+    from repro.core.modelspec import AttnSpec, ModelSpec
+    from repro.core.parallelism import ParallelismConfig
+    from repro.scenario import compare, run as run_scenarios
+    from repro.scenario.engine_backend import lower_model
+
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        raise SystemExit(
+            "--compare-tp needs a >= 2-device mesh; on CPU export "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8 before "
+            "running")
+    # TP-friendly GQA geometry (8 q heads / 4 kv heads): tp=4 still
+    # leaves every rank a kv head; bench-tiny's 4/2 cannot shard past 2
+    tp_spec = ModelSpec(name="bench-tp", d_model=64, n_layers=2, n_heads=8,
+                        n_kv_heads=4, d_head=16, d_ff=128, vocab=256,
+                        attn=AttnSpec(kind="full", causal=True))
+    sc = sc.replace(model=tp_spec)
+    spec, model, params = lower_model(tp_spec)
+    ps = page_size(args, sc)
+    meshes = [(name, tp, pp) for name, tp, pp in
+              [("tp1", 1, 1), ("tp2", 2, 1), ("tp4", 4, 1), ("pp2", 1, 2)]
+              if tp * pp <= n_dev]
+    out = {"devices": n_dev, "page_size": ps, "n_requests": args.requests,
+           "rates": args.rates, "mixes": args.mixes, "meshes": {}}
+    outputs: dict[str, list] = {}
+    for name, tp, pp in meshes:
+        cfg = EngineConfig(max_slots=args.slots, max_seq=args.max_seq,
+                           chunk_size=min(args.chunk, args.max_seq),
+                           prefill_rows=args.prefill_rows, unified=True,
+                           cache_layout="paged", page_size=ps,
+                           n_pages=args.n_pages, tp=tp, pp=pp)
+        eng = ServeEngine(model, params, cfg, rng=jax.random.key(1))
+        # warm the jitted programs so cell 0 isn't all compile time
+        eng.serve([Request(prompt=[1, 2, 3, 4, 5], max_new_tokens=2)])
+        cells, outs = [], []
+        for mix in args.mixes:
+            for rate in args.rates:
+                cell, reqs = run_cell(eng, spec.vocab, rate, mix,
+                                      args.requests, args.max_new,
+                                      args.seed)
+                cells.append(cell)
+                outs.append([list(r.output) for r in reqs])
+        outputs[name] = outs
+        steps = sum(c["steps"] for c in cells)
+        disp = sum(c["dispatches"] for c in cells)
+        tx = sum(c["transfers_d2h"] for c in cells)
+        # per-host hot-path invariant, preserved on the mesh: exactly ONE
+        # jitted dispatch and ONE device->host pull per engine step
+        assert disp == steps, (name, disp, steps)
+        assert tx == steps, (name, tx, steps)
+        gen = sum(c["generated_tokens"] for c in cells)
+        wall = sum(c["cell_wall_s"] for c in cells)
+        agg = {
+            "tp": tp, "pp": pp, "cells": cells,
+            "generated_tokens": gen,
+            "sweep_wall_s": wall,
+            "tokens_per_s": gen / wall if wall > 0 else 0.0,
+            "ttft_s_mean": float(np.mean([c["ttft_s_mean"]
+                                          for c in cells])),
+            "tpot_s_mean": float(np.mean([c["tpot_s_mean"]
+                                          for c in cells])),
+            "dispatches_per_step": disp / max(steps, 1),
+            "transfers_per_step": tx / max(steps, 1),
+            "collectives_per_step": (sum(c.get("collectives", 0)
+                                         for c in cells) / max(steps, 1)),
+            "allreduce_bytes_per_step": (sum(c.get("collective_bytes", 0)
+                                             for c in cells)
+                                         / max(steps, 1)),
+            "outputs_sha1": hashlib.sha1(repr(outs).encode()).hexdigest(),
+        }
+        # predicted-vs-measured at this mesh shape (the Scenario carries
+        # the ParallelismConfig; the engine backend lowers it to tp/pp)
+        sc_m = sc.replace(parallelism=ParallelismConfig(tp=tp, pp=pp))
+        pred = run_scenarios([sc_m], backend="analytical")[0]
+        meas = run_scenarios(
+            [sc_m], backend="engine",
+            engine_kw=dict(unified=True, max_slots=args.slots,
+                           max_seq=args.max_seq,
+                           prefill_rows=args.prefill_rows, page_size=ps,
+                           n_requests=args.requests))[0]
+        agg["analytical"] = {
+            "predicted_ttft_s": pred.ttft_s,
+            "predicted_tpot_s": pred.tpot_s,
+            "predicted_max_concurrency": pred.max_concurrency,
+            "measured_ttft_s": meas.ttft_s,
+            "measured_tpot_s": meas.tpot_s,
+            "measured_max_concurrency": meas.max_concurrency,
+            "status": meas.status,
+            "compare": compare(pred, meas),
+        }
+        out["meshes"][name] = agg
+    for name in outputs:  # greedy token identity across every mesh shape
+        assert outputs[name] == outputs["tp1"], \
+            f"{name} diverged from the tp=1 engine on the same workload"
+    out["token_identical"] = sorted(outputs)
     return out
 
 
@@ -686,6 +798,14 @@ def main() -> None:
     ap.add_argument("--time-scale", type=float, default=1.0,
                     help="compress (<1) or stretch (>1) trace arrival "
                          "times at replay")
+    ap.add_argument("--compare-tp", action="store_true",
+                    help="mesh-sharded unified engine across "
+                         "{tp=1, tp=2, tp=4, pp=2}: greedy outputs asserted "
+                         "token-identical to tp=1, per-step collectives and "
+                         "all-reduce bytes recorded, and predicted-vs-"
+                         "measured TTFT/TPOT/max-concurrency per mesh shape "
+                         "(needs >= 2 devices; on CPU export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweep for CI: one rate, two mixes")
     ap.add_argument("--out", default=None, help="write JSON here too")
@@ -706,7 +826,7 @@ def main() -> None:
         sc = build_scenario(args)
         paged = (args.paged or args.unified or args.compare_unified
                  or args.compare_prefix or args.compare_disagg
-                 or args.trace is not None)
+                 or args.compare_tp or args.trace is not None)
         if paged and not sc.opt.paged_kv:
             sc = sc.replace(opt=dataclasses.replace(
                 sc.opt, paged_kv=True, kv_page_size=page_size(args, sc)))
@@ -798,6 +918,29 @@ def main() -> None:
                   "result": compare_paged(sc, args)}
         text = json.dumps(report, indent=2)
         print(text)
+        if args.out:
+            Path(args.out).write_text(text)
+            print(f"wrote {args.out}", file=sys.stderr)
+        return
+
+    if args.compare_tp:
+        sc = scenario_for_run()
+        res = compare_tp(sc, args)
+        report = {"bench": "serving_bench/compare_tp",
+                  "scenario": sc.to_dict(), "smoke": args.smoke,
+                  "result": res}
+        text = json.dumps(report, indent=2)
+        print(text)
+        for name, m in res["meshes"].items():
+            a = m["analytical"]
+            print(f"{name}: {m['tokens_per_s']:.1f} tok/s, "
+                  f"{m['collectives_per_step']:.1f} collectives/step, "
+                  f"{m['allreduce_bytes_per_step'] / 1024:.1f} KiB "
+                  f"all-reduce/step, tpot predicted "
+                  f"{a['predicted_tpot_s']:.3e} vs measured "
+                  f"{a['measured_tpot_s']:.3e} s", file=sys.stderr)
+        print(f"token-identical across meshes: "
+              f"{', '.join(res['token_identical'])}", file=sys.stderr)
         if args.out:
             Path(args.out).write_text(text)
             print(f"wrote {args.out}", file=sys.stderr)

@@ -103,4 +103,15 @@ python benchmarks/serving_bench.py --compare-disagg --smoke > /dev/null
 #  migration, and closes the analytical loop on the inter-pool
 #  bandwidth term)
 
+echo "== mesh-sharded serving: tp/pp smoke on 8 forced virtual devices =="
+mkdir -p artifacts/benchmarks
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python benchmarks/serving_bench.py --compare-tp --smoke \
+    --out artifacts/benchmarks/tp_serving.json > /dev/null
+# (compare_tp serves the same sweep through tp=1/tp=2/tp=4/pp=2 meshes,
+#  asserts greedy outputs token-identical and one dispatch + one d2h
+#  transfer per step per host, records per-step collective count and
+#  estimated all-reduce bytes, and closes the predicted-vs-measured
+#  TTFT/TPOT/max-concurrency loop per mesh shape)
+
 echo "CI OK"

@@ -330,6 +330,64 @@ def default_cases() -> list[KernelCase]:
                 np.asarray(q_start, np.int32), np.asarray(q_len, np.int32),
                 np.asarray(kv_len, np.int32), max_q=max_q)
         cases.append(KernelCase(f"ragged_paged[segs={segs}]", ragged))
+    cases.extend(sharded_cases())
+    return cases
+
+
+def sharded_cases() -> list[KernelCase]:
+    """Per-shard operand shapes from the mesh-sharded unified step.
+
+    Under ``shard_map`` every worker sees the *local* slice of the paged
+    pools — kv heads divided by tp, layers by pp — and runs the very same
+    kernels on them with its per-shard page table.  An index map proven
+    in bounds for the full shapes is not automatically in bounds for the
+    shard (``sh // hkv`` walks a *smaller* hkv), so the registry
+    re-checks the kernels at the local geometry the sharded engine
+    produces: base Hq=8 / Hkv=4 / D=16 at tp in {2, 4} -> local Hq=4 /
+    Hkv=2 and the degenerate-but-legal Hq=2 / Hkv=1 (MHA-per-shard).
+    """
+    from repro.kernels.decode_attention import pallas_paged_decode_attention
+    from repro.kernels.ragged_attention import pallas_ragged_paged_attention
+
+    cases: list[KernelCase] = []
+
+    def z(shape, dtype=np.float32):
+        return np.zeros(shape, dtype)
+
+    base_hq, base_hkv, D, ps, mp = 8, 4, 16, 8, 4
+    segs = [(1, 7), (5, 13), (0, 0), (1, 20)]
+    for tp in (2, 4):
+        hq, hkv = base_hq // tp, base_hkv // tp
+
+        def paged(B=3, hq=hq, hkv=hkv, D=D, P=9, ps=ps, mp=mp):
+            pt, lengths = _paged_tables(B, P, ps, mp)
+            return pallas_paged_decode_attention(
+                z((B, 1, hq, D)), z((P, hkv, ps, D)), z((P, hkv, ps, D)),
+                pt, lengths)
+        cases.append(KernelCase(
+            f"decode_paged[tp{tp},Hq{hq},Hkv{hkv},D{D}]", paged))
+
+        def ragged(segs=segs, hq=hq, hkv=hkv):
+            S = len(segs)
+            P = 1 + sum(-(-kv // ps) for _, kv in segs) + 1
+            pt = np.zeros((S, mp), np.int32)
+            free = list(range(1, P))
+            q_start, q_len, kv_len = [], [], []
+            off = 0
+            for ql, kl in segs:
+                q_start.append(off)
+                q_len.append(ql)
+                kv_len.append(kl)
+                for i in range(-(-kl // ps)):
+                    pt[len(q_start) - 1, i] = free.pop(0)
+                off += ql
+            T = max(off, 1)
+            return pallas_ragged_paged_attention(
+                z((T, hq, D)), z((P, hkv, ps, D)), z((P, hkv, ps, D)), pt,
+                np.asarray(q_start, np.int32), np.asarray(q_len, np.int32),
+                np.asarray(kv_len, np.int32), max_q=8)
+        cases.append(KernelCase(
+            f"ragged_paged[tp{tp},Hq{hq},Hkv{hkv},segs={segs}]", ragged))
     return cases
 
 

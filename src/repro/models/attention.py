@@ -488,5 +488,10 @@ def attention_block(spec: ModelSpec, ctx: ModelContext, params: dict,
     o = ctx.shard(o, "batch", "seq", "act_heads", None)
     o = o.reshape(b, s, spec.n_heads * spec.d_head)
     y = o @ params["wo"]
+    if ctx.tp_axis is not None:
+        # column-sharded wq/wk/wv gave this rank n_heads/tp heads; the
+        # row-sharded wo leaves a partial sum — the layer's first of two
+        # all-reduces restores the replicated residual stream
+        y = jax.lax.psum(y, ctx.tp_axis)
     y = ctx.shard(y, "batch", "seq_res", "act_embed")
     return y, new_cache

@@ -51,6 +51,12 @@ class ModelContext:
     #: tokens per KV page for the paged layout (internal fragmentation is
     #: bounded by one page per request)
     kv_page_size: int = 16
+    #: named mesh axis this context runs *inside* (a ``shard_map`` worker
+    #: with Megatron-style column/row-sharded weights): attention's output
+    #: projection and the MLP down projection each ``psum`` their partial
+    #: results over it — exactly one all-reduce per column/row pair.  None
+    #: outside shard_map (single device, or GSPMD via ``mesh``).
+    tp_axis: str | None = None
 
     def shard(self, x: jax.Array, *logical_axes: str | None) -> jax.Array:
         if self.mesh is None:

@@ -41,4 +41,8 @@ def mlp_block(spec: ModelSpec, ctx: ModelContext, params: dict,
         up = act(up)
     up = ctx.shard(up, "batch", "seq", "act_mlp")
     y = up @ params["w_down"]
+    if ctx.tp_axis is not None:
+        # column-sharded w_up/w_gate, row-sharded w_down: the partial
+        # products all-reduce here — the layer pair's second collective
+        y = jax.lax.psum(y, ctx.tp_axis)
     return ctx.shard(y, "batch", "seq_res", "act_embed")

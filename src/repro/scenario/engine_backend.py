@@ -71,6 +71,9 @@ DEFAULTS = dict(max_slots=8, max_seq=256, prefill_rows=2, max_prompt=64,
                 max_new=32, n_requests=None, seed=0, temperature=0.0,
                 cache_layout=None, page_size=None, n_pages=None,
                 kv_budget_bytes=None, unified=False, prefix_cache=False,
+                # -- mesh-sharding overrides (None: take the Scenario's
+                # ParallelismConfig tp/pp degrees) ---------------------------
+                tp=None, pp=None,
                 # -- disaggregated-mode knobs --------------------------------
                 disagg_split=None,  # (prefill_rows, decode_slots) override
                 prefill_slots=1, decode_prefill_rows=1,
@@ -227,6 +230,29 @@ def _paged_lowering(sc: Scenario, spec, geo: dict, kw: dict) -> dict:
     return {"cache_layout": "paged", "page_size": ps, "n_pages": n_pages}
 
 
+def _parallelism_lowering(sc: Scenario, kw: dict) -> tuple[int, int]:
+    """Scenario ``ParallelismConfig`` -> the (tp, pp) degrees the live
+    engine shards over.  Axes the engine cannot lower refuse loudly:
+    silently measuring a tp=pp=1 run against an ep>1 prediction would
+    corrupt every ``compare()`` cell built on it."""
+    from ..serving.sharded import SUPPORTED_AXES
+
+    par = sc.parallelism
+    bad = [(ax, par.degree(ax)) for ax in ("ep", "dp", "sp")
+           if par.degree(ax) > 1]
+    if bad:
+        named = ", ".join(f"{ax}={v}" for ax, v in bad)
+        raise ValueError(
+            f"engine backend cannot lower parallelism axis {named}: the "
+            "live ServeEngine shards tensor (tp: kv-heads/FFN) and "
+            "pipeline (pp: layers) only — supported axes: "
+            f"{', '.join(SUPPORTED_AXES)}; ep/dp/sp grids run on the "
+            "analytical backend")
+    tp = int(kw["tp"]) if kw.get("tp") is not None else par.tp
+    pp = int(kw["pp"]) if kw.get("pp") is not None else par.pp
+    return tp, pp
+
+
 def _run_engine(sc: Scenario, spec, model, params, kw: dict) -> Report:
     import jax
     from ..serving import EngineConfig, ServeEngine
@@ -236,13 +262,15 @@ def _run_engine(sc: Scenario, spec, model, params, kw: dict) -> Report:
         chunk = max(1, min(sc.chunked.chunk, geo["prompt_len"]))
     else:  # monolithic: the whole prompt in one prefill chunk
         chunk = geo["prompt_len"]
+    tp, pp = _parallelism_lowering(sc, kw)
     prefix = bool(kw["prefix_cache"]) or sc.opt.prefix_hit_rate > 0
-    kw["unified"] = bool(kw["unified"]) or prefix  # prefix needs the
-    paging = _paged_lowering(sc, spec, geo, kw)    # unified paged step
+    # prefix + mesh sharding both ride the unified paged step
+    kw["unified"] = bool(kw["unified"]) or prefix or tp * pp > 1
+    paging = _paged_lowering(sc, spec, geo, kw)
     cfg = EngineConfig(max_slots=int(kw["max_slots"]), max_seq=geo["max_seq"],
                        chunk_size=chunk, prefill_rows=int(kw["prefill_rows"]),
                        unified=bool(kw["unified"]), prefix_cache=prefix,
-                       **paging)
+                       tp=tp, pp=pp, **paging)
     eng = ServeEngine(model, params, cfg, rng=jax.random.key(int(kw["seed"])))
     reqs = _make_requests(sc, spec, geo, kw, prefix=prefix)
     eng.serve(reqs)
@@ -264,6 +292,7 @@ def _run_engine(sc: Scenario, spec, model, params, kw: dict) -> Report:
                                  "prefill_rows": cfg.prefill_rows,
                                  "unified": cfg.unified,
                                  "prefix_cache": cfg.prefix_cache,
+                                 "tp": cfg.tp, "pp": cfg.pp,
                                  **paging},
                "model": spec.name})
 
@@ -288,6 +317,13 @@ def _run_disaggregated(sc: Scenario, spec, model, params,
                                    MigrationLink, pool_split_from_plan)
     from .scenario import DisaggSpec
 
+    if sc.parallelism.total > 1 or sc.parallelism.sp > 1:
+        raise ValueError(
+            f"mode 'disaggregated' cannot lower parallelism "
+            f"[{sc.parallelism.describe()}]: mesh sharding (tp/pp) is "
+            "wired to the unified single-engine step only — supported "
+            "axes for the engine backend: tp, pp under mode "
+            "'monolithic'/'chunked'")
     geo = _geometry(sc, kw)
     budget = int(kw["max_slots"])
     if budget < 2:
@@ -387,6 +423,13 @@ def _run_disaggregated(sc: Scenario, spec, model, params,
 
 def _run_speculative(sc: Scenario, spec, model, params, kw: dict) -> Report:
     from ..serving.speculative import SpeculativeDecoder
+
+    if sc.parallelism.total > 1 or sc.parallelism.sp > 1:
+        raise ValueError(
+            f"mode 'speculative' cannot lower parallelism "
+            f"[{sc.parallelism.describe()}]: the speculative decoder "
+            "runs single-device — supported axes for the engine backend: "
+            "tp, pp under mode 'monolithic'/'chunked'")
 
     if sc.opt.paged_kv or kw["cache_layout"] == "paged" or kw["unified"]:
         # don't silently measure a dense run under a paged label

@@ -94,6 +94,7 @@ from ..compat import tree
 from ..models.attention import (PackedSegs, PagedAttnCache,
                                 paged_insert_rows)
 from ..models.model import Model, ModelCache
+from . import sharded as shard
 from .paging import PageAllocator
 from .prefix_cache import PrefixCache
 from .sampling import SamplingConfig, sample_slots
@@ -173,6 +174,15 @@ class EngineConfig:
     #: Greedy outputs are identical with the guards on or off — this mode
     #: only *observes*.
     debug_guards: bool = False
+    #: tensor-parallel degree: the unified step runs under ``shard_map``
+    #: on a (pp, tp) device mesh with heads/FFN column-row sharded and
+    #: the paged KV pools split on their kv-head axis (requires
+    #: ``unified=True`` and tp*pp visible devices; on CPU export
+    #: ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)
+    tp: int = 1
+    #: pipeline-parallel degree: shards the stacked layer ``repeats`` axis
+    #: of params and KV pools; the step runs a masked ppermute ring
+    pp: int = 1
 
 
 @dataclass
@@ -204,6 +214,9 @@ class EngineMetrics:
     preemptions: int = 0  # victims pushed back to the queue (pool ran dry)
     capacity_stops: int = 0  # requests force-finished (no victim available)
     pages_in_use_peak: int = 0
+    # -- mesh-sharded counters (zero at tp=pp=1) ------------------------------
+    collectives: int = 0  # psum/ppermute/all_gather ops issued per device
+    collective_bytes: int = 0  # estimated all-reduce/ring bytes moved
     # -- P/D disaggregation counters (zero outside a DisaggCluster) ----------
     exports: int = 0  # prefill completions handed off to a decode pool
     imports: int = 0  # migrated requests installed into a decode slot
@@ -269,6 +282,13 @@ class EngineMetrics:
         if self.exports or self.imports:  # only under P/D disaggregation
             out["exports"] = self.exports
             out["imports"] = self.imports
+        if self.collectives:  # only on a >1-device mesh
+            out["collectives"] = self.collectives
+            out["collective_bytes"] = self.collective_bytes
+            out["collectives_per_step"] = (self.collectives / self.steps
+                                           if self.steps else 0.0)
+            out["allreduce_bytes_per_step"] = (
+                self.collective_bytes / self.steps if self.steps else 0.0)
         if self.prefix_lookups:  # keep cache-off summaries unchanged
             out.update(
                 prefix_hit_rate=self.prefix_hit_rate,
@@ -328,6 +348,7 @@ class ServeEngine:
                 "prefix_cache=True requires unified=True: shared pages are "
                 "read in place by the packed step's ragged attention; the "
                 "dense-scratch prefill path cannot map them")
+        shard.validate_engine_sharding(model.spec, config)
         self.unified = config.unified
         self.paged = config.cache_layout == "paged"
         if self.paged:
@@ -430,6 +451,39 @@ class ServeEngine:
         self._dev_utokens = None
         self._dev_ptab = None
 
+        # -- mesh-sharded serving (tp/pp > 1) ---------------------------------
+        # place params and the paged pools ONCE with their (pp, tp)
+        # NamedShardings so steady-state dispatches reshard nothing; the
+        # per-profile collective counts are static functions of the packed
+        # geometry, accumulated into metrics after each dispatch
+        self.tp, self.pp = config.tp, config.pp
+        self.mesh = shard.make_engine_mesh(self.tp, self.pp) \
+            if self.tp * self.pp > 1 else None
+        self._coll_mixed = self._coll_decode = (0, 0)
+        self._ptab_sharding = None
+        if self.mesh is not None:
+            self.params = shard.shard_tree(
+                self.params, shard.param_pspecs(self.model, self.tp,
+                                                self.pp), self.mesh)
+            self.cache = shard.shard_tree(
+                self.cache, shard.cache_pspecs(self.model, self.tp,
+                                               self.pp), self.mesh)
+            self._ptab_sharding = jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec())
+            # the static packed layouts live replicated on the mesh, like
+            # every other per-step input (see _up)
+            self._seg_start_dev = jax.device_put(self._seg_start,
+                                                 self._ptab_sharding)
+            self._seg_start_decode_dev = jax.device_put(
+                self._seg_start[:config.max_slots], self._ptab_sharding)
+            nbytes = np.dtype(self.model.ctx.compute_dtype).itemsize
+            self._coll_mixed = shard.collective_stats(
+                model.spec, self.tp, self.pp, self.t_pack, self.n_segs,
+                nbytes)
+            self._coll_decode = shard.collective_stats(
+                model.spec, self.tp, self.pp, config.max_slots,
+                config.max_slots, nbytes)
+
         self._jit_decode = jax.jit(self._decode_and_sample,
                                    donate_argnums=(1, 2))
         self._jit_prefill = jax.jit(self._prefill_masked,
@@ -444,15 +498,27 @@ class ServeEngine:
         # decode+prefill layout, and a decode-only layout (T = max_slots,
         # max_q = 1) so idle prefill rows cost nothing.  Shapes depend
         # only on the geometry — nothing retraces as widths vary.
-        self._jit_unified = jax.jit(
-            functools.partial(self._unified_and_sample,
-                              max_q=max(config.chunk_size, 1),
-                              n_decode=config.max_slots),
-            donate_argnums=(1,))
-        self._jit_unified_decode = jax.jit(
-            functools.partial(self._unified_and_sample, max_q=1,
-                              n_decode=0),
-            donate_argnums=(1,))
+        if self.mesh is not None:
+            # same signatures, same two static profiles — but the packed
+            # forward runs per-shard under shard_map on the mesh
+            self._jit_unified = shard.build_sharded_step(
+                self.model, self.mesh, self.tp, self.pp,
+                max_slots=config.max_slots,
+                max_q=max(config.chunk_size, 1),
+                n_decode=config.max_slots)
+            self._jit_unified_decode = shard.build_sharded_step(
+                self.model, self.mesh, self.tp, self.pp,
+                max_slots=config.max_slots, max_q=1, n_decode=0)
+        else:
+            self._jit_unified = jax.jit(
+                functools.partial(self._unified_and_sample,
+                                  max_q=max(config.chunk_size, 1),
+                                  n_decode=config.max_slots),
+                donate_argnums=(1,))
+            self._jit_unified_decode = jax.jit(
+                functools.partial(self._unified_and_sample, max_q=1,
+                                  n_decode=0),
+                donate_argnums=(1,))
 
         # debug-guards bookkeeping: last observed jit cache size of each
         # steady-state dispatch (``_jit_prefill`` legitimately traces once
@@ -492,6 +558,15 @@ class ServeEngine:
                     "engine geometry, so slot churn must never retrace")
             # repro-lint: disable=RPL204 — cache sizes are host ints
             self._trace_sizes[name] = max(prev, size)
+
+    def _up(self, x) -> jax.Array:
+        """Host -> device upload of a packed-step input.  On a mesh the
+        upload is an *explicit* ``device_put`` onto the replicated
+        NamedSharding (transfer-guard-exempt, and the dispatch reshards
+        nothing); single-device keeps the plain ``jnp.asarray``."""
+        if self._ptab_sharding is not None:
+            return jax.device_put(x, self._ptab_sharding)
+        return jnp.asarray(x)
 
     @staticmethod
     def _dev_i32(val) -> jax.Array:
@@ -966,9 +1041,14 @@ class ServeEngine:
 
     def _sync_page_table(self) -> None:
         if self._ptab_dirty:
+            # on a mesh the table is replicated: an explicit device_put
+            # with its NamedSharding keeps the donated-buffer layout
+            # stable (page ids are global — only the head axis shards)
+            ptab = jnp.asarray(self._ptab) if self._ptab_sharding is None \
+                else jax.device_put(self._ptab, self._ptab_sharding)
             self.cache = ModelCache(layers=self.cache.layers,
                                     lengths=self.cache.lengths,
-                                    page_table=jnp.asarray(self._ptab))
+                                    page_table=ptab)
             self._ptab_dirty = False
 
     # -- decode ---------------------------------------------------------------
@@ -1153,10 +1233,10 @@ class ServeEngine:
                     topks[seg] = s.top_k
                     topps[seg] = s.top_p
             fn, seg_start = self._jit_unified, self._seg_start_dev
-            tokens_dev = jnp.asarray(tokens)
-            ptab_dev = jnp.asarray(seg_ptab)
-            sampling_dev = (jnp.asarray(temps), jnp.asarray(topks),
-                            jnp.asarray(topps))
+            tokens_dev = self._up(tokens)
+            ptab_dev = self._up(seg_ptab)
+            sampling_dev = (self._up(temps), self._up(topks),
+                            self._up(topps))
         else:
             # decode-only steady state: tokens, sampling params and the
             # slot page table all live on device already — nothing but
@@ -1165,24 +1245,31 @@ class ServeEngine:
                 self._seg_start_decode_dev
             tokens_dev = self._dev_utokens
             if tokens_dev is None:
-                tokens_dev = jnp.asarray(self._tokens[:, 0])
+                tokens_dev = self._up(self._tokens[:, 0])
             if self._dev_ptab is None:
-                self._dev_ptab = jnp.asarray(self._ptab)
+                self._dev_ptab = self._up(self._ptab)
             ptab_dev = self._dev_ptab
             if self._dev_sampling is None:
-                self._dev_sampling = (jnp.asarray(self._temps),
-                                      jnp.asarray(self._topks),
-                                      jnp.asarray(self._topps))
+                self._dev_sampling = (self._up(self._temps),
+                                      self._up(self._topks),
+                                      self._up(self._topps))
             sampling_dev = self._dev_sampling
         self.rng, step_key = jax.random.split(self.rng)
+        if self._ptab_sharding is not None:
+            # the split key lives on device 0: replicate it explicitly so
+            # the dispatch stays transfer-free under the guard
+            step_key = jax.device_put(step_key, self._ptab_sharding)
         sampled, self._dev_utokens, self.cache = fn(
-            self.params, self.cache, tokens_dev, jnp.asarray(positions),
-            seg_start, jnp.asarray(q_len), jnp.asarray(kv_len), ptab_dev,
+            self.params, self.cache, tokens_dev, self._up(positions),
+            seg_start, self._up(q_len), self._up(kv_len), ptab_dev,
             step_key, *sampling_dev)
         # the step's only device->host transfer: the (S,) sampled tokens
         toks = jax.device_get(sampled)
         self.metrics.dispatches += 1
         self.metrics.transfers_d2h += 1
+        coll, coll_bytes = self._coll_mixed if mixed else self._coll_decode
+        self.metrics.collectives += coll
+        self.metrics.collective_bytes += coll_bytes
         now = time.perf_counter()
         if self.active:
             self.metrics.decode_steps += 1

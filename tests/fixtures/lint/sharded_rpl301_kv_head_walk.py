@@ -1,0 +1,65 @@
+"""Seeded RPL301: a shard_map worker walking the *global* kv-head axis.
+
+Under tensor parallelism every worker's KV pool is the per-shard slice —
+``LOCAL_HKV = GLOBAL_HKV // TP`` heads.  The bug seeded here is the one
+the concrete kernel-bounds pass exists to catch and AST linting cannot:
+the grid and the BlockSpec index map still walk ``GLOBAL_HKV``, so every
+block they select is in bounds at tp=1 and escapes the pool's head axis
+on every shard of a tp>=2 mesh.  The ``# EXPECT`` marker sits on the
+``pallas_call`` line, where the pass reports it.
+
+This file is exercised by building a ``KernelCase`` around
+``local_shard_case`` and running ``check_kernel_bounds`` on it (see
+tests/test_tp_serving.py); it deliberately does NOT match the
+``rpl*.py`` fixture glob, because the AST-only golden sweep cannot see
+value-dependent bounds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+GLOBAL_HKV = 4
+TP = 2
+LOCAL_HKV = GLOBAL_HKV // TP
+PAGES, PAGE, D = 6, 8, 16
+
+
+def _copy_kernel(pt_ref, kv_ref, o_ref):
+    o_ref[...] = kv_ref[...]
+
+
+def sharded_page_gather(kv_pool, page_table):
+    """Gather the first page of every slot, per kv head.
+
+    ``kv_pool`` is the worker's local slice ``(PAGES, LOCAL_HKV, PAGE,
+    D)`` but the grid's head axis and both index maps run to
+    ``GLOBAL_HKV`` — heads ``h >= LOCAL_HKV`` select blocks past the
+    pool's head axis at every grid point of a sharded run.
+    """
+    slots = page_table.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(slots, GLOBAL_HKV),
+        in_specs=[pl.BlockSpec((1, 1, PAGE, D),
+                               lambda b, h, pt: (pt[b, 0], h, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, PAGE, D),
+                               lambda b, h, pt: (b, h, 0, 0)),
+    )
+    return pl.pallas_call(  # EXPECT: RPL301
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((slots, GLOBAL_HKV, PAGE, D),
+                                       jnp.float32),
+        interpret=True,
+    )(page_table, kv_pool)
+
+
+def local_shard_case():
+    """The thunk ``check_kernel_bounds`` runs: per-shard pool, global
+    head walk."""
+    kv_pool = np.zeros((PAGES, LOCAL_HKV, PAGE, D), np.float32)
+    page_table = np.asarray([[1, 2, 0], [3, 4, 5]], np.int32)
+    return sharded_page_gather(kv_pool, page_table)

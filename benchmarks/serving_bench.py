@@ -13,8 +13,8 @@ trajectory (tokens/s, TTFT, TPOT, slot occupancy per cell).
         --out artifacts/benchmarks/paged_kv.json   # dense-vs-paged capacity
     PYTHONPATH=src python benchmarks/serving_bench.py --compare-unified \
         --out artifacts/benchmarks/unified_step.json  # one-dispatch win
-    PYTHONPATH=src python benchmarks/serving_bench.py --speculative \
-        --out artifacts/benchmarks/speculative_sync.json  # sync batching
+    PYTHONPATH=src python benchmarks/serving_bench.py --compare-spec \
+        --out artifacts/benchmarks/speculative.json  # batched speculation
     PYTHONPATH=src python benchmarks/serving_bench.py --trace [trace.json] \
         # replay a (generated or loaded) bursty multi-tenant trace through
         # the prefix-cache engine AND a cache-off twin; token identity
@@ -642,83 +642,149 @@ def compare_disagg(sc, args) -> dict:
     return out
 
 
-def compare_speculative(sc, args) -> dict:
-    """Per-token-sync vs batched-sync speculative decoding on identical
-    prompts (self-draft): the decoder's draft loop used to block on the
-    host once per proposed token plus once per verified position; the
-    batched path samples proposals on device and pulls the whole
-    accept/reject payload in ONE ``jax.device_get`` per draft window.
-    Records tokens/s and measured host syncs per verify round for both."""
+def compare_spec(sc, args) -> dict:
+    """Batched speculative decoding inside the unified engine, measured
+    three ways on identical prompts (self-draft, so greedy acceptance is
+    ~1.0 and token identity is exact):
+
+      * ``spec_off`` — the unified engine with ``n_spec=0`` (one target
+        pass per decode token),
+      * ``spec_on`` — the same engine with ``n_spec=K``: every decode slot
+        runs a K+1-token verify segment and the whole draft/verify round
+        is ONE jitted dispatch + ONE device->host transfer per step
+        (asserted below, per engine),
+      * ``batch1_decoder`` — the retained ``SpeculativeDecoder`` oracle,
+        one request at a time (the pre-batching reference).
+
+    Greedy outputs are asserted token-identical between spec_on and
+    spec_off.  The fig-11 predicted-vs-measured loop then runs the same
+    Scenario in ``mode='speculative'`` through the analytical backend —
+    with ``gamma`` set to the MEASURED acceptance rate — and the engine
+    backend, and ``repro.scenario.compare`` reports the TPOT error."""
+    import dataclasses
+
     from repro.scenario.engine_backend import lower_model
     from repro.serving.speculative import SpeculativeDecoder
 
     spec, model, params = lower_model(sc.model)
+    k = args.n_spec
+    ps = page_size(args, sc)
     rng = np.random.default_rng(args.seed)
     lo, hi = MIXES["mixed"]
     prompts = [[int(t) for t in rng.integers(0, spec.vocab, size=int(r))]
                for r in rng.integers(lo, hi, size=args.requests)]
 
-    out = {"n_spec": args.n_spec, "max_new_tokens": args.max_new,
-           "n_prompts": len(prompts), "temperature": 1e-3}
-    for mode in ("per_token_sync", "batched_sync"):
-        batched = mode == "batched_sync"
-        # warm the jitted programs on a throwaway decoder
-        warm = SpeculativeDecoder(model, params, model, params,
-                                  n_spec=args.n_spec, max_seq=args.max_seq,
-                                  temperature=1e-3, rng=jax.random.key(9),
-                                  batched_sync=batched)
-        warm.generate(prompts[0], 4)
+    def requests():
+        # engines mutate Request in place: each side gets fresh clones
+        return [Request(prompt=list(p), max_new_tokens=args.max_new)
+                for p in prompts]
 
-        # count the host pulls both paths actually issue: explicit
-        # jax.device_get plus np.asarray on device arrays (the legacy
-        # path's int()/float() syncs are NOT counted, so its number is a
-        # lower bound — wall-clock is the headline metric either way)
-        pulls = 0
-        real_get, real_asarray = jax.device_get, np.asarray
-
-        def counting_get(x):
-            nonlocal pulls
-            pulls += 1
-            return real_get(x)
-
-        def counting_asarray(x, *a, **kw):
-            nonlocal pulls
-            if isinstance(x, jax.Array):
-                pulls += 1
-            return real_asarray(x, *a, **kw)
-
-        gen = rounds = 0
+    out = {"n_spec": k, "draft": "self", "n_requests": args.requests,
+           "max_new_tokens": args.max_new, "max_slots": args.slots,
+           "max_seq": args.max_seq, "page_size": ps,
+           "prefill_rows": args.prefill_rows}
+    outputs: dict[str, list] = {}
+    for mode in ("spec_off", "spec_on"):
+        on = mode == "spec_on"
+        cfg = EngineConfig(max_slots=args.slots, max_seq=args.max_seq,
+                           chunk_size=min(args.chunk, args.max_seq),
+                           prefill_rows=args.prefill_rows, unified=True,
+                           cache_layout="paged", page_size=ps,
+                           n_pages=args.n_pages, n_spec=k if on else 0)
+        eng = ServeEngine(model, params, cfg, rng=jax.random.key(1),
+                          draft_model=model if on else None,
+                          draft_params=params if on else None)
+        # warm the jitted programs so the timed window is steady-state
+        eng.serve([Request(prompt=[1, 2, 3, 4, 5], max_new_tokens=2)])
+        eng.metrics = EngineMetrics()
+        eng.pager.peak_in_use = eng.pager.pages_in_use
         t0 = time.perf_counter()
-        jax.device_get, np.asarray = counting_get, counting_asarray
-        try:
-            for p in prompts:
-                d = SpeculativeDecoder(model, params, model, params,
-                                       n_spec=args.n_spec,
-                                       max_seq=args.max_seq,
-                                       temperature=1e-3,
-                                       rng=jax.random.key(args.seed),
-                                       batched_sync=batched)
-                toks = d.generate(p, args.max_new)
-                gen += len(toks)
-                rounds += d.stats.target_passes
-        finally:
-            jax.device_get, np.asarray = real_get, real_asarray
+        reqs = eng.serve(requests())
         wall = time.perf_counter() - t0
+        assert all(r.state == "done" for r in reqs)
+        outputs[mode] = [list(r.output) for r in reqs]
+        cell = eng.metrics.summary(reqs)
+        cell.update(eng.kv_stats())
+        # the hot-path contract, WITH speculation riding the packed batch:
+        # exactly one jitted dispatch and one device->host pull per step
+        assert cell["dispatches"] == cell["steps"] > 0, \
+            (mode, cell["dispatches"], cell["steps"])
+        assert cell["transfers_d2h"] == cell["steps"], \
+            (mode, cell["transfers_d2h"], cell["steps"])
         out[mode] = {
-            "generated_tokens": gen,
             "wall_s": wall,
-            "tokens_per_s": gen / wall if wall > 0 else 0.0,
-            "verify_rounds": rounds,
-            "host_pulls": pulls,
-            "syncs_per_round": pulls / max(rounds, 1),
-            "acceptance_rate": d.stats.acceptance_rate,
+            "generated_tokens": cell["generated_tokens"],
+            "tokens_per_s": cell["generated_tokens"] / wall if wall else 0.0,
+            "tpot_s_mean": cell.get("tpot_s_mean"),
+            "ttft_s_mean": cell.get("ttft_s_mean"),
+            "steps": cell["steps"],
+            "dispatches_per_step": cell["dispatches"] / cell["steps"],
+            "transfers_per_step": cell["transfers_d2h"] / cell["steps"],
+            "acceptance_rate": cell.get("spec_acceptance_rate", 0.0),
+            "tokens_per_window": cell.get("spec_tokens_per_round", 0.0),
+            "outputs_sha1": hashlib.sha1(
+                repr(outputs[mode]).encode()).hexdigest(),
+            "engine": cell,
         }
-    out["tokens_per_s_win"] = (out["batched_sync"]["tokens_per_s"]
-                               / max(out["per_token_sync"]["tokens_per_s"],
-                                     1e-12))
-    out["sync_collapse"] = (out["per_token_sync"]["syncs_per_round"]
-                            / max(out["batched_sync"]["syncs_per_round"],
-                                  1e-12))
+    # self-draft greedy speculation must not change a single token
+    assert outputs["spec_off"] == outputs["spec_on"], \
+        "speculative engine diverged from the non-speculative engine"
+    out["token_identity"] = True
+    out["tokens_per_s_win"] = (out["spec_on"]["tokens_per_s"]
+                               / max(out["spec_off"]["tokens_per_s"], 1e-12))
+    off_t, on_t = out["spec_off"]["tpot_s_mean"], out["spec_on"]["tpot_s_mean"]
+    out["tpot_win"] = (off_t / on_t) if off_t and on_t else None
+
+    # the batch-1 oracle: same K, same self-draft, one request at a time
+    sd = SpeculativeDecoder(model, params, model, params, n_spec=k,
+                            max_seq=args.max_seq, temperature=1e-3,
+                            rng=jax.random.key(9))
+    sd.generate(prompts[0], 4)  # warm
+    gen = 0
+    t0 = time.perf_counter()
+    for p in prompts:
+        d = SpeculativeDecoder(model, params, model, params, n_spec=k,
+                               max_seq=args.max_seq, temperature=1e-3,
+                               rng=jax.random.key(args.seed))
+        gen += len(d.generate(p, args.max_new))
+    wall = time.perf_counter() - t0
+    out["batch1_decoder"] = {
+        "generated_tokens": gen, "wall_s": wall,
+        "tokens_per_s": gen / wall if wall else 0.0,
+        "acceptance_rate": d.stats.acceptance_rate,
+    }
+    out["batch1_win"] = (out["spec_on"]["tokens_per_s"]
+                         / max(out["batch1_decoder"]["tokens_per_s"], 1e-12))
+
+    # fig-11 closed loop: the measured acceptance becomes the analytical
+    # gamma, and the same Scenario runs through both backends
+    from repro.scenario import SpeculativeSpec, compare, run as run_scenarios
+    acc = out["spec_on"]["acceptance_rate"]
+    sc_s = sc.replace(mode="speculative",
+                      speculative=SpeculativeSpec(draft=sc.model, n=k,
+                                                  gamma=acc),
+                      opt=dataclasses.replace(sc.opt, paged_kv=True,
+                                              kv_page_size=ps))
+    pred = run_scenarios([sc_s], backend="analytical")[0]
+    meas = run_scenarios(
+        [sc_s], backend="engine",
+        engine_kw=dict(max_slots=args.slots, max_seq=args.max_seq,
+                       prefill_rows=args.prefill_rows, page_size=ps,
+                       n_requests=args.requests, seed=args.seed))[0]
+    errs = compare(pred, meas)
+    out["fig11"] = {
+        "gamma": acc,
+        "status": meas.status,
+        "predicted_tpot_s": pred.tpot_s,
+        "measured_tpot_s": meas.tpot_s,
+        "predicted_tokens_per_s": pred.throughput_tok_s,
+        "measured_tokens_per_s": meas.throughput_tok_s,
+        "measured_acceptance": (meas.extra or {}).get("acceptance_rate"),
+        "measured_tokens_per_window": (meas.extra or {}).get(
+            "tokens_per_pass"),
+        "tpot_error": errs.get("tpot_s"),
+        "compare": errs,
+    }
     return out
 
 
@@ -768,13 +834,15 @@ def main() -> None:
     ap.add_argument("--link-bw", type=float, default=100e9,
                     help="simulated inter-pool link bandwidth (B/s) for "
                          "--compare-disagg migration accounting")
-    ap.add_argument("--speculative", action="store_true",
-                    help="per-token-sync vs batched-sync speculative "
-                         "decoding on identical prompts (records the "
-                         "tokens/s win and measured host syncs per "
-                         "verify round; skips the rate sweep)")
+    ap.add_argument("--compare-spec", action="store_true",
+                    help="speculative vs non-speculative unified engine on "
+                         "identical prompts (self-draft; token-identity and "
+                         "the one-dispatch/one-transfer-per-step invariant "
+                         "asserted), plus the batch-1 decoder reference and "
+                         "the fig-11 predicted-vs-measured TPOT loop with "
+                         "gamma = measured acceptance; skips the rate sweep")
     ap.add_argument("--n-spec", type=int, default=4,
-                    help="draft window for --speculative")
+                    help="draft window K for --compare-spec")
     ap.add_argument("--trace", nargs="?", const=True, default=None,
                     metavar="PATH",
                     help="replay a trace (from PATH, or generated from the "
@@ -826,25 +894,38 @@ def main() -> None:
         sc = build_scenario(args)
         paged = (args.paged or args.unified or args.compare_unified
                  or args.compare_prefix or args.compare_disagg
-                 or args.compare_tp or args.trace is not None)
+                 or args.compare_tp or args.compare_spec
+                 or args.trace is not None)
         if paged and not sc.opt.paged_kv:
             sc = sc.replace(opt=dataclasses.replace(
                 sc.opt, paged_kv=True, kv_page_size=page_size(args, sc)))
         return sc
 
-    if args.speculative:
-        sc = build_scenario(args)
-        res = compare_speculative(sc, args)
-        report = {"bench": "serving_bench/speculative_sync",
+    if args.compare_spec:
+        sc = scenario_for_run()
+        res = compare_spec(sc, args)
+        report = {"bench": "serving_bench/speculative",
                   "scenario": sc.to_dict(), "smoke": args.smoke,
                   "result": res}
         text = json.dumps(report, indent=2)
         print(text)
-        print(f"batched vs per-token sync: "
-              f"{res['tokens_per_s_win']:.2f}x tokens/s, "
-              f"{res['per_token_sync']['syncs_per_round']:.1f} -> "
-              f"{res['batched_sync']['syncs_per_round']:.1f} host pulls "
-              "per verify round", file=sys.stderr)
+        on, off = res["spec_on"], res["spec_off"]
+        print(f"speculative vs non-speculative unified engine "
+              f"(token-identical): {res['tokens_per_s_win']:.2f}x tokens/s "
+              f"({off['tokens_per_s']:.1f} -> {on['tokens_per_s']:.1f}), "
+              f"acceptance {on['acceptance_rate']:.2f}, "
+              f"{on['tokens_per_window']:.2f} tokens/window, "
+              f"{on['dispatches_per_step']:.0f} dispatch + "
+              f"{on['transfers_per_step']:.0f} transfer per step; "
+              f"{res['batch1_win']:.1f}x over the batch-1 decoder",
+              file=sys.stderr)
+        f11 = res["fig11"]
+        err = f11.get("tpot_error")
+        print(f"fig-11 loop (gamma={f11['gamma']:.2f}): tpot predicted "
+              f"{f11['predicted_tpot_s']:.3e} vs measured "
+              f"{f11['measured_tpot_s']:.3e} s "
+              f"(error {err if err is None else f'{err:.3f}'})",
+              file=sys.stderr)
         if args.out:
             Path(args.out).write_text(text)
             print(f"wrote {args.out}", file=sys.stderr)

@@ -330,6 +330,37 @@ def default_cases() -> list[KernelCase]:
                 np.asarray(q_start, np.int32), np.asarray(q_len, np.int32),
                 np.asarray(kv_len, np.int32), max_q=max_q)
         cases.append(KernelCase(f"ragged_paged[segs={segs}]", ragged))
+
+    # speculative verify windows — the PackedSpeculator's decode-segment
+    # geometries: K+1-wide verify segments (max_q = 5 at K = 4, one token
+    # committed + K drafts, causal within the segment, including a
+    # max_seq-capped partial window) and the 2-wide draft catch-up stride.
+    # Bounds must hold when every segment is multi-token and reads a
+    # ragged kv frontier that ends mid-page.
+    spec_layouts = [
+        ([(5, 12), (5, 17), (2, 9), (0, 0)], 5),  # verify: K=4, one capped
+        ([(2, 8), (1, 5), (2, 21), (2, 2)], 2),   # draft catch-up stride
+    ]
+    for segs, w in spec_layouts:
+        def verify(segs=segs, w=w):
+            S = len(segs)
+            P = 1 + sum(-(-kv // ps) for _, kv in segs) + 1
+            pt = np.zeros((S, mp), np.int32)
+            free = list(range(1, P))
+            q_start, q_len, kv_len = [], [], []
+            for s, (ql, kl) in enumerate(segs):
+                q_start.append(s * w)  # fixed verify-window stride
+                q_len.append(ql)
+                kv_len.append(kl)
+                for i in range(-(-kl // ps)):
+                    pt[s, i] = free.pop(0)
+            return pallas_ragged_paged_attention(
+                z((S * w, Hq, D)), z((P, Hkv, ps, D)), z((P, Hkv, ps, D)),
+                pt, np.asarray(q_start, np.int32),
+                np.asarray(q_len, np.int32), np.asarray(kv_len, np.int32),
+                max_q=w)
+        cases.append(KernelCase(f"ragged_paged[spec,w{w},segs={segs}]",
+                                verify))
     cases.extend(sharded_cases())
     return cases
 

@@ -46,6 +46,11 @@ ENTRY_POINTS: tuple[tuple[str, str], ...] = (
     ("SpeculativeDecoder", "generate"),
     ("SpeculativeDecoder", "decode_round"),
     ("SpeculativeDecoder", "prefill"),
+    # batched speculative hot path: the fused draft/verify dispatch and
+    # the CoW pair-fork must issue ZERO syncs — the engine's _spec_step
+    # performs the round's single device_get on what dispatch returns
+    ("PackedSpeculator", "dispatch"),
+    ("PackedSpeculator", "fork_page"),
     ("PrefixCache", "lookup"),
     ("PrefixCache", "acquire"),
     ("PrefixCache", "insert"),

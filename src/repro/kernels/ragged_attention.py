@@ -17,7 +17,11 @@ against exactly the KV pages its request owns:
     * causal masking *within* the segment — a prefill chunk's query at
       in-chunk offset i sits at global position kv_len - q_len + i and may
       only see keys at positions <= that (decode degenerates to the usual
-      "see everything valid" with q_len == 1),
+      "see everything valid" with q_len == 1; a K+1-token speculative
+      *verify* segment — one committed token followed by K draft
+      proposals — is exactly this rule at q_len = K+1, so batched
+      draft-token verification needs no kernel change, only the
+      fixed-stride packing in :class:`repro.serving.PackedSpeculator`),
     * ragged row masking — rows past ``q_len`` (the fixed-width query tile
       of a shorter segment, or an inactive segment with q_len == 0)
       contribute nothing and produce zeros.

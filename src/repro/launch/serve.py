@@ -4,8 +4,10 @@
         --requests 8 --max-new 16 [--devices 4 --tp 2]
 
 Reduced configs on CPU (full configs are sized for real pods).  Prints
-per-request outputs + engine throughput; ``--speculative`` routes through
-the speculative decoder.
+per-request outputs + engine throughput; ``--n-spec K`` serves through
+the unified engine with batched speculative decoding (self-draft: the
+target verifies its own proposals, so greedy outputs are unchanged and
+the acceptance counters exercise the full path).
 """
 
 import argparse
@@ -48,6 +50,9 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--devices", type=int, default=None)
     ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--n-spec", type=int, default=0,
+                    help="draft window K for batched speculative decoding "
+                         "(self-draft; implies the unified paged engine)")
     args = ap.parse_args()
 
     spec = registry.get_reduced(args.arch)
@@ -69,10 +74,20 @@ def main() -> None:
                     sampling=SamplingConfig(temperature=args.temperature,
                                             top_k=40))
             for _ in range(args.requests)]
-    eng = ServeEngine(model, params,
-                      EngineConfig(max_slots=args.slots,
-                                   max_seq=args.max_seq,
-                                   chunk_size=args.chunk))
+    if args.n_spec:
+        if mesh is not None:
+            raise SystemExit("--n-spec is single-device (the fused "
+                             "draft/verify step is not sharded)")
+        cfg = EngineConfig(max_slots=args.slots, max_seq=args.max_seq,
+                           chunk_size=args.chunk, cache_layout="paged",
+                           unified=True, n_spec=args.n_spec)
+        eng = ServeEngine(model, params, cfg, rng=jax.random.key(0),
+                          draft_model=model, draft_params=params)
+    else:
+        eng = ServeEngine(model, params,
+                          EngineConfig(max_slots=args.slots,
+                                       max_seq=args.max_seq,
+                                       chunk_size=args.chunk))
     t0 = time.time()
     if mesh is not None:
         with mesh:
@@ -86,6 +101,11 @@ def main() -> None:
               f"{r.output[:10]}{'...' if len(r.output) > 10 else ''}")
     print(f"\n{len(reqs)} requests, {toks} tokens, {dt:.1f}s "
           f"({toks/dt:.1f} tok/s, {eng.steps} engine steps)")
+    if args.n_spec:
+        m = eng.metrics
+        print(f"speculative: acceptance {m.spec_acceptance_rate:.2f}, "
+              f"{m.spec_tokens_per_round:.2f} tokens/window over "
+              f"{m.spec_slot_rounds} windows")
 
 
 if __name__ == "__main__":

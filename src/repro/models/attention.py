@@ -58,10 +58,14 @@ class PackedSegs:
     the widest segment the layout allows (the engine's chunk size).
 
     ``n_decode`` (static) tells the attention path that the first
-    ``n_decode`` segments are single-token decode slots sitting at packed
-    offsets [0, n_decode): it then runs them as a max_q=1 sub-batch inside
-    the same dispatch, so decode slots never pay a chunk-wide padded query
-    tile.  0 means no static split is known (generic ragged packing).
+    ``n_decode`` segments are fixed-width decode slots sitting at packed
+    offsets [0, n_decode * decode_q): it then runs them as a
+    max_q=decode_q sub-batch inside the same dispatch, so decode slots
+    never pay a chunk-wide padded query tile.  0 means no static split is
+    known (generic ragged packing).  ``decode_q`` (static) is the decode
+    segment stride — 1 for plain decode, K+1 for speculative verify
+    segments (one committed token + K draft tokens, causal within the
+    segment).
     """
     q_start: jax.Array  # (S,) int32 token offset of each segment's queries
     q_len: jax.Array  # (S,) int32 new tokens this step (0 = inactive)
@@ -69,6 +73,7 @@ class PackedSegs:
     page_table: jax.Array  # (S, max_pages) int32 pages each segment owns
     max_q: int = 1
     n_decode: int = 0
+    decode_q: int = 1
 
     @property
     def n_segs(self) -> int:
@@ -77,7 +82,7 @@ class PackedSegs:
 
 jax.tree_util.register_dataclass(
     PackedSegs, data_fields=["q_start", "q_len", "kv_len", "page_table"],
-    meta_fields=["max_q", "n_decode"])
+    meta_fields=["max_q", "n_decode", "decode_q"])
 
 
 def init_attention(spec: ModelSpec, keys: KeyGen, dtype) -> dict:
@@ -385,16 +390,19 @@ def _packed_paged_attention(spec: ModelSpec, ctx: ModelContext,
                   * new_cache.v_scale[..., None]).astype(v.dtype)
 
     nd = packed.n_decode
-    if 0 < nd < s_count and packed.max_q > 1:
+    dq = packed.decode_q
+    if 0 < nd < s_count and packed.max_q > dq:
         # static decode/prefill split (same dispatch, two sub-batches):
-        # the nd decode segments run at max_q=1 instead of dragging a
-        # chunk-wide padded query tile through the kernel
+        # the nd decode segments run at max_q=decode_q (1 for plain
+        # decode, K+1 for speculative verify windows) instead of dragging
+        # a chunk-wide padded query tile through the kernel
         o_dec = kops.ragged_paged_attention(
-            q[0, :nd], ka, va, packed.page_table[:nd], packed.q_start[:nd],
-            packed.q_len[:nd], packed.kv_len[:nd], max_q=1, impl=impl)
+            q[0, :nd * dq], ka, va, packed.page_table[:nd],
+            packed.q_start[:nd], packed.q_len[:nd], packed.kv_len[:nd],
+            max_q=dq, impl=impl)
         o_pre = kops.ragged_paged_attention(
-            q[0, nd:], ka, va, packed.page_table[nd:],
-            packed.q_start[nd:] - nd, packed.q_len[nd:],
+            q[0, nd * dq:], ka, va, packed.page_table[nd:],
+            packed.q_start[nd:] - nd * dq, packed.q_len[nd:],
             packed.kv_len[nd:], max_q=packed.max_q, impl=impl)
         o = jnp.concatenate([o_dec, o_pre], axis=0)
     else:

@@ -282,6 +282,43 @@ class Model:
         return logits, ModelCache(layers=new_layers, lengths=lengths,
                                   page_table=cache.page_table)
 
+    def verify_step(self, params, cache: ModelCache, tokens: jax.Array,
+                    positions: jax.Array, packed, *, n_decode: int,
+                    width: int) -> tuple[jax.Array, jax.Array, ModelCache]:
+        """Token-packed speculative verify step: like :meth:`unified_step`
+        but the first ``n_decode`` segments are fixed-stride verify
+        windows (``width`` = K+1 tokens: the slot's committed feed token
+        followed by K draft proposals, causal within the window), and the
+        target's logits are returned at *every* window position so the
+        engine can accept/reject drafts on device.  Returns
+        ``(dec_logits (n_decode, width, V), seg_logits (S, V), cache)``;
+        ``seg_logits`` rows for the decode segments are the usual
+        last-valid-position logits (used only by prefill sampling).
+
+        ``cache.lengths`` is returned *unchanged* for the decode slots —
+        the committed frontier depends on the accept counts, so the
+        caller overwrites lengths after rejection sampling (rollback is
+        pure length bookkeeping; rejected tokens' K/V stay in the pages
+        and are masked by kv_len until overwritten).
+        """
+        x = self._embed_in(params, tokens[None], embeds=None)
+        x = self.ctx.shard(x, "batch", "seq_res", "act_embed")
+        x, new_layers = T.apply_stack(self.spec, self.ctx, params["layers"],
+                                      x, positions[None], cache=cache.layers,
+                                      lengths=cache.lengths,
+                                      page_table=cache.page_table,
+                                      packed=packed)
+        # verify windows sit at packed offsets [0, n_decode * width) by
+        # layout, so the per-position gather is a static reshape
+        dec_h = x[0, :n_decode * width].reshape(n_decode, width, -1)
+        dec_logits = self._logits(params, dec_h)
+        last = packed.q_start + jnp.maximum(packed.q_len, 1) - 1
+        h = jnp.take(x[0], last, axis=0)  # (S, D)
+        seg_logits = self._logits(params, h[None])[0]
+        return dec_logits, seg_logits, ModelCache(
+            layers=new_layers, lengths=cache.lengths,
+            page_table=cache.page_table)
+
     def decode_step(self, params, cache: ModelCache, tokens: jax.Array,
                     *, embeds=None) -> tuple[jax.Array, ModelCache]:
         """One autoregressive step.  tokens: (B, 1) -> logits (B, V)."""

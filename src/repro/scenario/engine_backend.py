@@ -422,28 +422,23 @@ def _run_disaggregated(sc: Scenario, spec, model, params,
 
 
 def _run_speculative(sc: Scenario, spec, model, params, kw: dict) -> Report:
-    from ..serving.speculative import SpeculativeDecoder
+    """Lower ``mode='speculative'`` to the batched unified engine: every
+    decode slot runs a K+1-token verify segment through the one-dispatch
+    packed step (``ServeEngine(n_spec=K)`` + :class:`PackedSpeculator`),
+    so the measured TPOT / tokens-per-s are the continuous-batching
+    counterparts of ``core.stages.speculative_decode``'s fig-11 pricing,
+    and the measured acceptance rate is directly comparable to the
+    scenario's ``gamma``."""
+    import jax
+    from ..serving import EngineConfig, ServeEngine
 
     if sc.parallelism.total > 1 or sc.parallelism.sp > 1:
         raise ValueError(
             f"mode 'speculative' cannot lower parallelism "
-            f"[{sc.parallelism.describe()}]: the speculative decoder "
-            "runs single-device — supported axes for the engine backend: "
-            "tp, pp under mode 'monolithic'/'chunked'")
-
-    if sc.opt.paged_kv or kw["cache_layout"] == "paged" or kw["unified"]:
-        # don't silently measure a dense run under a paged label
-        asked = "unified" if kw["unified"] else "paged_kv"
-        return Report(
-            scenario=sc, backend="engine", status="unsupported",
-            error=f"mode 'speculative' with {asked} has no engine "
-                  "lowering: the speculative decoder runs draft/target "
-                  "on dense caches (ROADMAP: pack draft verification "
-                  "into the unified ragged step); lowerable today are "
-                  f"modes {', '.join(LOWERABLE_MODES)} — 'speculative' "
-                  "only with the dense layout, 'monolithic'/'chunked' "
-                  "with dense, paged or unified, 'disaggregated' on the "
-                  "unified paged cluster")
+            f"[{sc.parallelism.describe()}]: the fused draft/verify step "
+            "runs single-device (serving/sharded.py refuses n_spec under "
+            "tp/pp) — supported axes for the engine backend: tp, pp "
+            "under mode 'monolithic'/'chunked'")
 
     d_spec, d_model, d_params = lower_model(sc.speculative.draft)
     if d_spec.vocab != spec.vocab:
@@ -451,27 +446,44 @@ def _run_speculative(sc: Scenario, spec, model, params, kw: dict) -> Report:
                       error=f"draft vocab {d_spec.vocab} != target vocab "
                             f"{spec.vocab}")
     geo = _geometry(sc, kw)
-    sd = SpeculativeDecoder(model, params, d_model, d_params,
-                            n_spec=sc.speculative.n, max_seq=geo["max_seq"],
-                            temperature=max(float(kw["temperature"]), 0.5))
-    reqs = _make_requests(sc, spec, geo, kw)
-    t0 = time.perf_counter()
-    new_tokens = 0
-    for r in reqs:
-        out = sd.generate(list(r.prompt), geo["max_new"])
-        new_tokens += max(len(out) - len(r.prompt), 0)
-    wall = time.perf_counter() - t0
-    thr = new_tokens / wall if wall > 0 else 0.0
-    tpot = wall / new_tokens if new_tokens else None
+    chunk = max(1, min(sc.chunked.chunk if sc.chunked is not None else 16,
+                       geo["prompt_len"]))
+    prefix = bool(kw["prefix_cache"]) or sc.opt.prefix_hit_rate > 0
+    # speculative verify segments ride the unified paged step, always
+    kw = dict(kw, unified=True)
+    paging = _paged_lowering(sc, spec, geo, kw)
+    cfg = EngineConfig(max_slots=int(kw["max_slots"]),
+                       max_seq=geo["max_seq"], chunk_size=chunk,
+                       prefill_rows=int(kw["prefill_rows"]), unified=True,
+                       prefix_cache=prefix, n_spec=int(sc.speculative.n),
+                       **paging)
+    eng = ServeEngine(model, params, cfg,
+                      rng=jax.random.key(int(kw["seed"])),
+                      draft_model=d_model, draft_params=d_params)
+    reqs = _make_requests(sc, spec, geo, kw, prefix=prefix)
+    eng.serve(reqs)
+    summary = eng.metrics.summary(reqs)
+    done = [r for r in reqs if r.state == "done"]
+    latency = (sum(r.finish_t - r.submit_t for r in done) / len(done)
+               if done else None)
     return Report(
         scenario=sc, backend="engine", status="ok",
-        tpot_s=tpot, latency_s=wall / max(len(reqs), 1),
-        throughput_tok_s=thr, fits_memory=True,
-        extra={"lowering": geo, "model": spec.name, "draft": d_spec.name,
-               "acceptance_rate": sd.stats.acceptance_rate,
-               "tokens_per_pass": sd.stats.tokens_per_pass,
-               "target_passes": sd.stats.target_passes,
-               "generated_tokens": new_tokens, "wall_s": wall})
+        ttft_s=summary.get("ttft_s_mean"), tpot_s=summary.get("tpot_s_mean"),
+        latency_s=latency, throughput_tok_s=summary["tokens_per_s"],
+        max_concurrency=summary.get("peak_active"),
+        fits_memory=True, meets_slo=_meets(sc, summary),
+        extra={"engine": summary, "lowering": geo, "kv": eng.kv_stats(),
+               "engine_config": {"max_slots": cfg.max_slots,
+                                 "max_seq": cfg.max_seq,
+                                 "chunk_size": cfg.chunk_size,
+                                 "prefill_rows": cfg.prefill_rows,
+                                 "unified": True, "prefix_cache": prefix,
+                                 "n_spec": cfg.n_spec, **paging},
+               "model": spec.name, "draft": d_spec.name,
+               "acceptance_rate": summary.get("spec_acceptance_rate", 0.0),
+               "tokens_per_pass": summary.get("spec_tokens_per_round", 0.0),
+               "target_passes": summary.get("spec_slot_rounds",
+                                            eng.metrics.spec_slot_rounds)})
 
 
 def _meets(sc: Scenario, summary: dict) -> bool | None:

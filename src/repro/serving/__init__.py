@@ -10,6 +10,8 @@ from .cluster import (ClusterMetrics, DisaggCluster, DisaggClusterConfig,
 from .engine import EngineConfig, EngineMetrics, Request, ServeEngine
 from .paging import PageAllocator, pages_for
 from .prefix_cache import PrefixCache, PrefixCacheStats
+from .speculative import (PackedSpeculator, SpecDecodeStats,
+                          SpeculativeDecoder, rejection_accept)
 from .workload import (ReplaySummary, TraceConfig, TraceRequest,
                        generate_trace, replay, smoke_config, trace_from_json,
                        trace_to_json)
@@ -18,5 +20,7 @@ __all__ = ["EngineConfig", "EngineMetrics", "Request", "ServeEngine",
            "ClusterMetrics", "DisaggCluster", "DisaggClusterConfig",
            "KvMigrationChannel", "MigrationLink", "pool_split_from_plan",
            "PageAllocator", "pages_for", "PrefixCache", "PrefixCacheStats",
+           "PackedSpeculator", "SpecDecodeStats", "SpeculativeDecoder",
+           "rejection_accept",
            "TraceConfig", "TraceRequest", "ReplaySummary", "generate_trace",
            "replay", "smoke_config", "trace_from_json", "trace_to_json"]

@@ -98,6 +98,7 @@ from . import sharded as shard
 from .paging import PageAllocator
 from .prefix_cache import PrefixCache
 from .sampling import SamplingConfig, sample_slots
+from .speculative import PackedSpeculator
 
 
 @dataclass
@@ -183,6 +184,14 @@ class EngineConfig:
     #: pipeline-parallel degree: shards the stacked layer ``repeats`` axis
     #: of params and KV pools; the step runs a masked ppermute ring
     pp: int = 1
+    #: speculative decoding: every decode slot contributes a K+1-token
+    #: verify segment (its committed token + K draft proposals, causal
+    #: within the segment) to the packed batch, with the draft model's
+    #: propose loop, the target verify and device-side accept/reject all
+    #: fused into the step's ONE dispatch (requires ``unified=True`` and
+    #: ``draft_model``/``draft_params`` at engine construction; tp/pp
+    #: meshes are refused).  0 disables speculation.
+    n_spec: int = 0
 
 
 @dataclass
@@ -232,12 +241,34 @@ class EngineMetrics:
     prefix_shared_pages_peak: int = 0  # peak pages mapped by > 1 holder
     #: tenant -> [hit_tokens, lookup_tokens] (per-tenant hit attribution)
     prefix_by_tenant: dict = field(default_factory=dict)
+    # -- speculative-decoding counters (zero unless n_spec > 0) --------------
+    spec_rounds: int = 0  # engine steps that ran a draft/verify round
+    spec_slot_rounds: int = 0  # per-slot verify windows executed
+    spec_proposed: int = 0  # draft tokens offered for verification
+    spec_accepted: int = 0  # draft tokens the target accepted
+    spec_bonus: int = 0  # fully-accepted windows (earned a bonus token)
+    spec_emitted: int = 0  # tokens committed by speculative rounds
+    #: slot -> [accepted, proposed] (per-slot acceptance attribution)
+    spec_by_slot: dict = field(default_factory=dict)
 
     @property
     def prefix_hit_rate(self) -> float:
         """Token-weighted submit-time hit rate."""
         return (self.prefix_hit_tokens / self.prefix_lookup_tokens
                 if self.prefix_lookup_tokens else 0.0)
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Fraction of offered draft tokens the target accepted."""
+        return (self.spec_accepted / self.spec_proposed
+                if self.spec_proposed else 0.0)
+
+    @property
+    def spec_tokens_per_round(self) -> float:
+        """Effective tokens committed per per-slot verify window (1.0 is
+        the non-speculative baseline; the fig-11 win is this number)."""
+        return (self.spec_emitted / self.spec_slot_rounds
+                if self.spec_slot_rounds else 0.0)
 
     @property
     def wall_s(self) -> float:
@@ -289,6 +320,21 @@ class EngineMetrics:
                                            if self.steps else 0.0)
             out["allreduce_bytes_per_step"] = (
                 self.collective_bytes / self.steps if self.steps else 0.0)
+        if self.spec_rounds:  # only with speculative decoding on
+            out.update(
+                spec_rounds=self.spec_rounds,
+                spec_proposed=self.spec_proposed,
+                spec_accepted=self.spec_accepted,
+                spec_bonus=self.spec_bonus,
+                spec_emitted=self.spec_emitted,
+                spec_acceptance_rate=self.spec_acceptance_rate,
+                spec_tokens_per_round=self.spec_tokens_per_round,
+                tokens_per_dispatch=(self.generated_tokens / self.dispatches
+                                     if self.dispatches else 0.0),
+                spec_by_slot={s: {"accepted": a, "proposed": p,
+                                  "acceptance_rate": a / p if p else 0.0}
+                              for s, (a, p)
+                              in sorted(self.spec_by_slot.items())})
         if self.prefix_lookups:  # keep cache-off summaries unchanged
             out.update(
                 prefix_hit_rate=self.prefix_hit_rate,
@@ -320,7 +366,8 @@ class EngineMetrics:
 
 class ServeEngine:
     def __init__(self, model: Model, params, config: EngineConfig,
-                 rng: jax.Array | None = None):
+                 rng: jax.Array | None = None, draft_model: Model | None = None,
+                 draft_params=None):
         if config.max_slots < 1:
             raise ValueError("EngineConfig.max_slots must be >= 1")
         if config.prefill_rows < 1:
@@ -348,6 +395,21 @@ class ServeEngine:
                 "prefix_cache=True requires unified=True: shared pages are "
                 "read in place by the packed step's ragged attention; the "
                 "dense-scratch prefill path cannot map them")
+        if config.n_spec < 0:
+            raise ValueError("EngineConfig.n_spec must be >= 0")
+        if config.n_spec:
+            if not config.unified:
+                raise ValueError(
+                    "n_spec > 0 requires unified=True: speculative verify "
+                    "segments ride the packed ragged dispatch")
+            if draft_model is None or draft_params is None:
+                raise ValueError(
+                    "n_spec > 0 needs draft_model and draft_params: the "
+                    "draft proposes the K tokens the target verifies")
+        elif draft_model is not None:
+            raise ValueError(
+                "draft_model given but n_spec == 0: set EngineConfig."
+                "n_spec=K to enable speculative decoding")
         shard.validate_engine_sharding(model.spec, config)
         self.unified = config.unified
         self.paged = config.cache_layout == "paged"
@@ -520,6 +582,19 @@ class ServeEngine:
                                   n_decode=0),
                 donate_argnums=(1,))
 
+        # speculative decoding: the PackedSpeculator owns the draft model,
+        # its page-id-mirrored KV pool (same allocator, same n_pages — the
+        # slot page-table rows address both pools), the draft-consumed
+        # host mirror, and the fused draft/verify jit profiles
+        self.speculator: PackedSpeculator | None = None
+        if config.n_spec:
+            self.speculator = PackedSpeculator(
+                self.model, draft_model, draft_params,
+                n_spec=config.n_spec, max_slots=config.max_slots,
+                max_seq=config.max_seq, chunk_size=config.chunk_size,
+                prefill_rows=config.prefill_rows,
+                page_size=config.page_size, n_pages=self.pager.n_pages)
+
         # debug-guards bookkeeping: last observed jit cache size of each
         # steady-state dispatch (``_jit_prefill`` legitimately traces once
         # per chunk width and is excluded)
@@ -544,6 +619,9 @@ class ServeEngine:
         checks = (("_jit_decode", self._jit_decode),
                   ("_jit_unified", self._jit_unified),
                   ("_jit_unified_decode", self._jit_unified_decode))
+        if self.speculator is not None:
+            checks += (("_spec_mixed", self.speculator._jit_mixed),
+                       ("_spec_decode", self.speculator._jit_decode))
         # repro-lint: disable=RPL204 — iterates jit wrappers, not arrays
         for name, fn in checks:
             size_of = getattr(fn, "_cache_size", None)
@@ -869,9 +947,17 @@ class ServeEngine:
             self.pager.release_one(req.rid, shared_tail)
             if self.pager.ensure(req.rid, n_cached):  # ONE fresh fork page
                 fork = self.pager.owned(req.rid)[-1]
-                self.cache = self._jit_copy_page(self.cache,
-                                                 self._dev_i32(shared_tail),
-                                                 self._dev_i32(fork))
+                if self.speculator is not None:
+                    # mirrored pools: the shared page holds valid draft KV
+                    # too, so the CoW fork copies it in BOTH pools (one
+                    # fused dispatch keeps the accounting exact)
+                    self.cache = self.speculator.fork_page(
+                        self.cache, self._dev_i32(shared_tail),
+                        self._dev_i32(fork))
+                else:
+                    self.cache = self._jit_copy_page(
+                        self.cache, self._dev_i32(shared_tail),
+                        self._dev_i32(fork))
                 self.metrics.dispatches += 1
                 self.metrics.prefix_cow_forks += 1
                 n_cached = len(src) - 1
@@ -929,6 +1015,11 @@ class ServeEngine:
         if not self.paged:
             raise ValueError(
                 "imported-page installs need cache_layout='paged'")
+        if self.speculator is not None:
+            raise ValueError(
+                "speculative decoding (n_spec > 0) cannot accept imported "
+                "pages: the migration channel fills only the target pool, "
+                "so the mirrored draft pool would read garbage")
         if not self.free_slots:
             return False
         return self._ensure_or_evict(rid, n_tokens)
@@ -986,6 +1077,8 @@ class ServeEngine:
             self._ptab[slot] = 0
             self._ptab_dirty = True
             self._dev_ptab = None
+        if self.speculator is not None:
+            self.speculator.release_slot(slot)
 
     def _preempt(self, slot: int) -> None:
         """Victim preemption: push an active request back to the queue head
@@ -1012,6 +1105,11 @@ class ServeEngine:
             if req is None:
                 continue
             need = int(self._lengths[slot]) + 1
+            if self.speculator is not None:
+                # a verify window writes up to K positions past the
+                # committed frontier: reserve the whole window up front so
+                # rejected proposals never allocate mid-dispatch
+                need = min(need + self.speculator.k, self.cfg.max_seq)
             while not self._ensure_or_evict(req.rid, need):
                 victims = [s for s, r in self.active.items()
                            if r.rid != req.rid]
@@ -1294,6 +1392,164 @@ class ServeEngine:
             self._promote_prefill(row, int(toks[nslots + row]), now,
                                   install)
 
+    # -- speculative token-packed step ----------------------------------------
+    def _spec_step(self) -> None:
+        """The unified step with speculation: every active slot packs a
+        K+1-token verify window (committed feed + the draft's K proposals,
+        causal within the segment); the draft catch-up, the K-step propose
+        loop, the target verify, device-side accept/reject and prefill
+        chunks all ride ONE jitted dispatch, and the accepted tokens +
+        per-slot counts come back in the step's ONE device->host transfer.
+        Rollback of rejected tokens is pure length bookkeeping on both the
+        host mirrors and the device ``cache.lengths`` (stale K/V past the
+        accepted frontier is masked by kv_len until overwritten — the
+        preemption-recompute invariant)."""
+        self._grow_pages()
+        if not (self.active or self._prefills):
+            return
+        spec = self.speculator
+        nslots, csize = self.cfg.max_slots, self.cfg.chunk_size
+        rows = self.cfg.prefill_rows
+        mixed = bool(self._prefills)
+        n_samp = nslots + rows if mixed else nslots
+        feed = np.zeros((nslots,), np.int32)
+        d_feed = np.zeros((nslots, 2), np.int32)
+        lengths = np.zeros((nslots,), np.int32)
+        gaps = np.zeros((nslots,), np.int32)
+        win = np.zeros((nslots,), np.int32)
+        temps = np.zeros((n_samp,), np.float32)
+        topks = np.zeros((n_samp,), np.int32)
+        topps = np.ones((n_samp,), np.float32)
+        temps[:nslots] = self._temps
+        topks[:nslots] = self._topks
+        topps[:nslots] = self._topps
+        for slot, req in self.active.items():
+            src = self._src(req)
+            sl = int(self._lengths[slot])
+            g, tail = spec.catch_up(slot, src)
+            if not 1 <= g <= 2:  # the draft frontier invariant
+                raise AssertionError(
+                    f"slot {slot}: draft gap {g} outside {{1, 2}} "
+                    f"(d_len={int(spec.d_lens[slot])}, len={sl})")
+            feed[slot] = src[-1]
+            d_feed[slot, :g] = tail
+            lengths[slot] = sl
+            gaps[slot] = g
+            win[slot] = min(spec.k + 1, self.cfg.max_seq - sl)
+        widths: dict[int, int] = {}
+        if mixed:
+            pre_tokens = np.zeros((rows * csize,), np.int32)
+            pre_positions = np.zeros((rows * csize,), np.int32)
+            pre_q_len = np.zeros((rows,), np.int32)
+            pre_kv_len = np.zeros((rows,), np.int32)
+            pre_ptab = np.zeros((rows, self.max_pages), np.int32)
+            for row, req in self._prefills.items():
+                src = self._src(req)
+                self._pack_guard(req, len(src))
+                lo = self._prefill_pos[row]
+                w = min(csize, len(src) - lo)
+                qs = row * csize
+                pre_tokens[qs:qs + w] = src[lo:lo + w]
+                pre_positions[qs:qs + w] = np.arange(lo, lo + w)
+                pre_q_len[row] = w
+                pre_kv_len[row] = lo + w
+                pre_ptab[row] = self._ptab_row(req.rid)
+                widths[row] = w
+                if lo + w >= len(src):  # completes: sample with its config
+                    s = req.sampling
+                    temps[nslots + row] = s.temperature
+                    topks[nslots + row] = s.top_k
+                    topps[nslots + row] = s.top_p
+        else:
+            pre_tokens = pre_positions = pre_q_len = pre_kv_len = \
+                pre_ptab = None
+        if self._dev_ptab is None:
+            self._dev_ptab = self._up(self._ptab)
+        self.rng, step_key = jax.random.split(self.rng)
+        self.cache, pulled = spec.dispatch(
+            self.params, self.cache, feed, d_feed, lengths, gaps, win,
+            self._dev_ptab, pre_tokens, pre_positions, pre_q_len,
+            pre_kv_len, pre_ptab, step_key, temps, topks, topps,
+            mixed=mixed)
+        # the step's only device->host transfer: accepted tokens, per-slot
+        # counts, and (mixed) the completing prefills' first tokens
+        out_toks, n_emit, pre_sampled = jax.device_get(pulled)
+        self.metrics.dispatches += 1
+        self.metrics.transfers_d2h += 1
+        now = time.perf_counter()
+        if self.active:
+            self.metrics.decode_steps += 1
+            self.metrics.spec_rounds += 1
+        self._finish_spec_slots(out_toks, n_emit, win, now)
+        # -- prefill bookkeeping (identical to the non-speculative step) ------
+        if widths:
+            self.metrics.prefill_calls += 1
+            self.metrics.prefill_tokens += sum(widths.values())
+        finishing = [row for row, w in widths.items()
+                     if self._prefill_pos[row] + w
+                     >= len(self._src(self._prefills[row]))]
+        for row, w in widths.items():
+            self._prefill_pos[row] += w
+
+        def install(req, slot, row):
+            """Pages already hold the prompt's KV in BOTH pools (the
+            packed prefill chunks ran through target and draft): promote
+            is host bookkeeping plus seeding the draft frontier."""
+            self._ptab[slot] = self._ptab_row(req.rid)
+            self._dev_ptab = None
+            # _src already includes the just-sampled first token; the
+            # pools hold everything before it
+            spec.install_slot(slot, len(self._src(req)) - 1)
+
+        for row in finishing:
+            self._promote_prefill(row, int(pre_sampled[row]), now, install)
+
+    def _finish_spec_slots(self, out_toks, n_emit, win, now: float) -> None:
+        """Per-slot commit of a speculative round: append the accepted
+        prefix + the resampled/bonus token one at a time under the SAME
+        stop conditions as plain decode (max_new / eos / max_seq), so
+        greedy outputs truncate identically to the non-speculative engine.
+        A mid-window stop discards the tail and frees the slot — the
+        device's overshoot in ``cache.lengths`` dies with the slot."""
+        spec = self.speculator
+        m = self.metrics
+        for slot, req in list(self.active.items()):
+            sl = int(self._lengths[slot])
+            w = int(win[slot])
+            emit = int(n_emit[slot])
+            m.spec_slot_rounds += 1
+            m.spec_proposed += w - 1
+            m.spec_accepted += emit - 1
+            m.spec_bonus += emit == w
+            m.spec_emitted += emit
+            tally = m.spec_by_slot.setdefault(slot, [0, 0])
+            tally[0] += emit - 1
+            tally[1] += w - 1
+            req.tpot_steps += 1
+            done = False
+            committed = 0
+            for j in range(emit):
+                tok = int(out_toks[slot, j])
+                req.output.append(tok)
+                self._lengths[slot] += 1
+                committed += 1
+                m.generated_tokens += 1
+                done = (len(req.output) >= req.max_new_tokens
+                        or (req.eos_id is not None and tok == req.eos_id)
+                        or self._lengths[slot] >= self.cfg.max_seq - 1)
+                if done:
+                    break
+            spec.commit_slot(slot, sl, committed,
+                             spec.proposal_steps(sl))
+            if done:
+                req.state = "done"
+                req.finish_t = now
+                del self.active[slot]
+                self._release_slot(slot, req)
+                self.finished.append(req)
+            else:
+                self._tokens[slot, 0] = int(out_toks[slot, emit - 1])
+
     # -- main loop ------------------------------------------------------------
     @property
     def _prefilling(self) -> bool:
@@ -1309,7 +1565,9 @@ class ServeEngine:
         self.metrics.steps += 1
         self._admit()
         with self._step_guard():
-            if self.unified:
+            if self.speculator is not None:
+                self._spec_step()
+            elif self.unified:
                 self._unified_step()
             elif self.cfg.decode_priority:
                 self._decode_step()

@@ -97,6 +97,13 @@ def validate_engine_sharding(spec, config) -> None:
         raise ValueError(
             "tp/pp > 1 requires unified=True: only the token-packed "
             "one-dispatch step is threaded through shard_map")
+    if getattr(config, "n_spec", 0):
+        raise ValueError(
+            f"n_spec={config.n_spec} with tp={tp} pp={pp}: speculative "
+            "decoding is single-device only — the fused draft/verify step "
+            "is not threaded through build_sharded_step yet (the draft "
+            "pool and accept/reject would need their own shard_map "
+            "plumbing)")
     if any(k != "attn" for k in spec.layer_kinds()) \
             or spec.moe is not None:
         raise ValueError(

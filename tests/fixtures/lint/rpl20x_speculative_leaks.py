@@ -1,0 +1,30 @@
+"""Seeded violations: implicit device->host syncs inside the batched
+draft/verify hot path.  The class is named ``PackedSpeculator`` so the
+reachability walk seeds from ``dispatch`` / ``fork_page`` exactly as it
+does for the real speculator — whose fused round must issue ZERO syncs
+(the engine performs the step's single explicit ``device_get`` on what
+``dispatch`` returns; any implicit pull here would add a second
+device->host transfer per step and break the one-transfer invariant)."""
+import jax
+import numpy as np
+
+
+class PackedSpeculator:
+    def __init__(self):
+        self.d_lens = [0] * 8
+
+    def dispatch(self, cache, sampled, logits):
+        emitted = int(sampled[0])  # EXPECT: RPL202
+        host_toks = np.asarray(logits)  # EXPECT: RPL203
+        self.d_lens[sampled[1]] = emitted  # EXPECT: RPL204
+        for tok in sampled:  # EXPECT: RPL204
+            emitted += tok.item()  # EXPECT: RPL201
+        pulled = jax.device_get((sampled, logits))  # sanctioned: explicit
+        return cache, (emitted + int(host_toks[0]), pulled)
+
+    def fork_page(self, cache, kv):
+        return cache, kv.item()  # EXPECT: RPL201
+
+    def acceptance_report(self, logits):
+        # NOT reachable from an entry point: syncs here are fine
+        return float(logits.sum())

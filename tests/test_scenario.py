@@ -325,8 +325,8 @@ def test_engine_backend_disaggregated_lowers(tiny_spec):
 
 def test_engine_backend_unsupported_and_errors(tiny_spec):
     from repro.scenario.engine_backend import LOWERABLE_MODES
-    # every Scenario mode now lowers; the remaining refusal (speculative
-    # + paged) must list all of them
+    # every Scenario mode now lowers (speculative included, to the
+    # batched unified engine); full paper models still refuse
     assert set(LOWERABLE_MODES) == {"monolithic", "chunked", "speculative",
                                     "disaggregated"}
     spec_sc = _tiny_scenario(
@@ -334,9 +334,16 @@ def test_engine_backend_unsupported_and_errors(tiny_spec):
         speculative=SpeculativeSpec(draft="llama2-7b", n=2))
     rep, = run([spec_sc], backend="engine",
                engine_kw=dict(ENGINE_KW, unified=True))
-    assert rep.status == "unsupported"
-    for mode in LOWERABLE_MODES:
-        assert mode in rep.error
+    assert rep.status == "error"  # the DRAFT ref is a full paper model
+    assert "reduced" in rep.error
+    # tp/pp under speculation refuses with the named constraint
+    spec_tp = _tiny_scenario(
+        tiny_spec, mode="speculative",
+        speculative=SpeculativeSpec(draft=tiny_spec, n=2),
+        parallelism=dict(tp=2))
+    rep, = run([spec_tp], backend="engine", engine_kw=dict(ENGINE_KW))
+    assert rep.status == "error"
+    assert "single-device" in rep.error
     # a split needs >= 2 engine units: the error names the missing knob
     disagg = _tiny_scenario(tiny_spec, mode="disaggregated")
     rep, = run([disagg], backend="engine",

@@ -1,0 +1,426 @@
+"""Batched speculative decoding inside the unified engine.
+
+Covers the PR's acceptance surface: greedy token identity spec-on vs
+spec-off vs the batch-1 oracle (including under pool-pressure preemption
+recompute and prefix-cache CoW forks), the one-dispatch/one-transfer-per-
+step invariant with speculation on, the device-side rejection sampler
+against a brute-force host oracle on shared uniforms (seeded sweep, plus
+hypothesis when installed), the Monte-Carlo distribution guarantee, the
+EngineMetrics speculative counters, precise refusals (config validation,
+tp/pp sharding), and the ``batched_sync=False`` deprecation shim.
+"""
+
+import gc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import build_model
+from repro.serving import (EngineConfig, Request, ServeEngine,
+                           SpeculativeDecoder, rejection_accept)
+from repro.serving.sampling import SamplingConfig
+from repro.serving.sharded import validate_engine_sharding
+
+from conftest import tiny_dense_spec
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_caches():
+    """This module sits after the heaviest serving modules in collection
+    order; drop their accumulated jitted executables before building
+    another dozen engines in the same process (XLA:CPU has been seen to
+    segfault near the end of the full suite without this)."""
+    gc.collect()
+    jax.clear_caches()
+    yield
+    gc.collect()
+    jax.clear_caches()
+
+
+@pytest.fixture(scope="module")
+def served():
+    spec = tiny_dense_spec()
+    model = build_model(spec, mesh=None, param_dtype=jnp.float32,
+                        compute_dtype=jnp.float32)
+    params = model.init(jax.random.key(7))
+    return spec, model, params
+
+
+@pytest.fixture(scope="module")
+def drafted(served):
+    """A draft that is a small perturbation of the target: its argmax
+    agrees with the target's often but not always, so greedy runs exercise
+    BOTH the accept path and the rejection/rollback path."""
+    spec, model, params = served
+    rng = np.random.default_rng(99)
+    d_params = jax.tree_util.tree_map(
+        lambda a: a * (1.0 + 0.04 * rng.standard_normal(a.shape)
+                       .astype(np.float32)),
+        params)
+    return model, d_params
+
+
+def _engine(model, params, n_spec=0, draft=None, **kw):
+    cfg = EngineConfig(max_slots=kw.pop("max_slots", 3),
+                       max_seq=kw.pop("max_seq", 96),
+                       chunk_size=kw.pop("chunk_size", 4),
+                       prefill_rows=kw.pop("prefill_rows", 2),
+                       cache_layout="paged",
+                       page_size=kw.pop("page_size", 8),
+                       unified=True, n_spec=n_spec,
+                       debug_guards=True, **kw)
+    d_model, d_params = draft if draft else (None, None)
+    return ServeEngine(model, params, cfg, rng=jax.random.key(11),
+                       draft_model=d_model, draft_params=d_params)
+
+
+def _greedy_reference(model, params, prompt, n, max_seq=128):
+    cache = model.init_cache(1, max_seq)
+    logits, cache = model.prefill(
+        params, jnp.asarray([prompt], jnp.int32), cache=cache)
+    out = [int(jnp.argmax(logits[0]))]
+    for _ in range(n - 1):
+        logits, cache = model.decode_step(
+            params, cache, jnp.asarray([[out[-1]]], jnp.int32))
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+def _prompts(vocab, n, seed=0, lo=3, hi=14):
+    rng = np.random.default_rng(seed)
+    return [[int(t) for t in rng.integers(0, vocab, size=rng.integers(lo,
+                                                                      hi))]
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# greedy token identity
+# ---------------------------------------------------------------------------
+
+def test_greedy_identity_spec_on_off(served, drafted):
+    """A *different* draft (rejections happen) must not change one greedy
+    token vs the non-speculative unified engine and the step-by-step
+    reference."""
+    spec, model, params = served
+    prompts = _prompts(spec.vocab, 5, seed=1)
+    want = [
+        [r.output for r in _engine(model, params).serve(
+            [Request(prompt=list(p), max_new_tokens=10) for p in prompts])],
+        [_greedy_reference(model, params, p, 10) for p in prompts],
+    ]
+    eng = _engine(model, params, n_spec=3, draft=drafted)
+    reqs = eng.serve([Request(prompt=list(p), max_new_tokens=10)
+                      for p in prompts])
+    assert all(r.state == "done" for r in reqs)
+    got = [r.output for r in reqs]
+    assert got == want[0] == want[1]
+    m = eng.metrics
+    assert 0.0 < m.spec_acceptance_rate < 1.0  # real accept AND reject
+
+
+def test_self_draft_accepts_everything(served):
+    """Draft == target at temperature 0: every draft equals the target
+    argmax, so every window fully accepts and earns its bonus token."""
+    spec, model, params = served
+    eng = _engine(model, params, n_spec=3, draft=(model, params))
+    reqs = eng.serve([Request(prompt=list(p), max_new_tokens=12)
+                      for p in _prompts(spec.vocab, 4, seed=2)])
+    assert all(r.state == "done" for r in reqs)
+    m = eng.metrics
+    assert m.spec_acceptance_rate == 1.0
+    assert m.spec_tokens_per_round == 4.0  # K+1 per window
+    assert m.spec_bonus == m.spec_slot_rounds
+
+
+def test_one_dispatch_one_transfer_per_step(served, drafted):
+    """The whole draft/verify round rides the unified hot path: one jitted
+    dispatch and one device->host pull per engine step (debug_guards also
+    arms the transfer guard and the no-retrace check)."""
+    spec, model, params = served
+    eng = _engine(model, params, n_spec=3, draft=drafted)
+    reqs = eng.serve([Request(prompt=list(p), max_new_tokens=8)
+                      for p in _prompts(spec.vocab, 6, seed=3)])
+    assert all(r.state == "done" for r in reqs)
+    m = eng.metrics
+    assert m.dispatches == m.steps > 0
+    assert m.transfers_d2h == m.steps
+    assert m.spec_rounds > 0
+
+
+def test_stochastic_sampling_runs_clean(served, drafted):
+    """Temperature > 0 slots ride the same fused round (device-side
+    rejection sampling); debug_guards proves no stray transfer/retrace."""
+    spec, model, params = served
+    eng = _engine(model, params, n_spec=3, draft=drafted)
+    reqs = eng.serve([
+        Request(prompt=list(p), max_new_tokens=8,
+                sampling=SamplingConfig(temperature=0.8 + 0.1 * i))
+        for i, p in enumerate(_prompts(spec.vocab, 4, seed=4))])
+    assert all(r.state == "done" for r in reqs)
+    assert all(len(r.output) == 8 for r in reqs)
+    assert eng.metrics.spec_proposed > 0
+
+
+# ---------------------------------------------------------------------------
+# identity under pool pressure (preemption recompute) and prefix CoW
+# ---------------------------------------------------------------------------
+
+def test_preemption_recompute_identity(served):
+    """A page pool too small for all requests forces preempt + recompute
+    mid-decode; the speculative engine must still match the non-spec
+    engine token for token (draft pool lengths roll back with the slot)."""
+    spec, model, params = served
+    kw = dict(max_slots=3, max_seq=64, chunk_size=4, prefill_rows=1,
+              page_size=8, n_pages=13)
+    prompts = _prompts(spec.vocab, 3, seed=5, lo=6, hi=12)
+
+    def run(n_spec, draft):
+        eng = _engine(model, params, n_spec=n_spec, draft=draft, **kw)
+        reqs = eng.serve([Request(prompt=list(p), max_new_tokens=40)
+                          for p in prompts])
+        assert all(r.state == "done" for r in reqs)
+        return [r.output for r in reqs], eng.metrics
+
+    base, _ = run(0, None)
+    got, m = run(3, (model, params))
+    assert got == base
+    assert m.preemptions > 0  # the pool really was too small
+
+
+def test_prefix_cache_cow_fork_identity(served):
+    """A prefix-cache hit hands the speculative slot shared pages; the
+    first divergent write CoW-forks the page in BOTH pools (target and
+    draft mirror) through one fused copy.  Outputs must match the
+    cache-off engine and each other."""
+    spec, model, params = served
+    kw = dict(max_slots=2, max_seq=64, chunk_size=8, prefill_rows=1,
+              page_size=8, prefix_cache=True)
+    prompt = list(range(16))
+
+    eng = _engine(model, params, n_spec=3, draft=(model, params), **kw)
+    [r1] = eng.serve([Request(prompt=list(prompt), max_new_tokens=10)])
+    [r2] = eng.serve([Request(prompt=list(prompt), max_new_tokens=10)])
+    assert r1.state == r2.state == "done"
+    assert r1.output == r2.output
+    assert r2.n_cached > 0  # the second request actually hit the cache
+
+    off = _engine(model, params, n_spec=3, draft=(model, params),
+                  **{**kw, "prefix_cache": False})
+    [r3] = off.serve([Request(prompt=list(prompt), max_new_tokens=10)])
+    assert r3.output == r1.output
+
+
+# ---------------------------------------------------------------------------
+# rejection sampler vs brute-force oracle
+# ---------------------------------------------------------------------------
+
+def _softmax(x):
+    x = x - x.max()
+    e = np.exp(x)
+    return e / e.sum()
+
+
+def _oracle(dec_logits, d_probs, d_toks, temps, widths, u_acc, u_fin):
+    """Per-row Leviathan accept/reject, written as the obvious host loop."""
+    b, k = d_toks.shape
+    acc = np.zeros(b, np.int32)
+    out = np.zeros((b, k + 1), np.int32)
+    ne = np.zeros(b, np.int32)
+    for r in range(b):
+        w = int(widths[r])
+        greedy = temps[r] <= 0.0
+        tt = max(temps[r], 1e-4)
+        p_t = np.stack([_softmax(dec_logits[r, i].astype(np.float64) / tt)
+                        for i in range(k + 1)])
+        a = 0
+        for i in range(max(w - 1, 0)):
+            t = int(d_toks[r, i])
+            if greedy:
+                ok = t == int(np.argmax(dec_logits[r, i]))
+            else:
+                ok = u_acc[r, i] < min(
+                    1.0, p_t[i, t] / max(d_probs[r, i, t], 1e-20))
+            if not ok:
+                break
+            a += 1
+        full = a >= max(w - 1, 0)
+        if greedy:
+            final = int(np.argmax(dec_logits[r, a]))
+        else:
+            resid = p_t[a] - (0.0 if full else d_probs[r, min(a, k - 1)])
+            resid = np.maximum(resid, 0.0)
+            if resid.sum() <= 0.0:
+                resid = p_t[a]
+            cdf = np.cumsum(resid)
+            final = int(np.argmax(cdf >= u_fin[r] * cdf[-1]))
+        out[r, :k] = d_toks[r]
+        out[r, a] = final
+        acc[r] = a
+        ne[r] = a + 1 if w > 0 else 0
+    return acc, out, ne
+
+
+def _random_case(rng, b=6, k=4, v=12):
+    dec = rng.normal(size=(b, k + 1, v)).astype(np.float32) * 2.0
+    dp = rng.dirichlet(np.ones(v), size=(b, k)).astype(np.float32)
+    dt = np.stack([[rng.choice(v, p=dp[r, i] / dp[r, i].sum())
+                    for i in range(k)] for r in range(b)]).astype(np.int32)
+    temps = rng.choice([0.0, 0.7, 1.3], size=b).astype(np.float32)
+    widths = rng.integers(0, k + 2, size=b).astype(np.int32)
+    ua = rng.uniform(size=(b, k)).astype(np.float32)
+    uf = rng.uniform(size=b).astype(np.float32)
+    return dec, dp, dt, temps, widths, ua, uf
+
+
+def _check_against_oracle(case):
+    dec, dp, dt, temps, widths, ua, uf = case
+    a, out, ne = jax.device_get(rejection_accept(
+        jnp.asarray(dec), jnp.asarray(dp), jnp.asarray(dt),
+        jnp.asarray(temps), jnp.asarray(widths), jnp.asarray(ua),
+        jnp.asarray(uf)))
+    oa, oout, one = _oracle(dec.astype(np.float64), dp.astype(np.float64),
+                            dt, temps, widths, ua.astype(np.float64), uf)
+    np.testing.assert_array_equal(a, oa)
+    np.testing.assert_array_equal(ne, one)
+    for r in range(len(oa)):
+        if one[r]:  # only committed positions are contractual
+            np.testing.assert_array_equal(out[r, :one[r]], oout[r, :one[r]])
+
+
+def test_rejection_accept_matches_oracle_seeded():
+    """200 random accept/reject interleavings (greedy and stochastic rows,
+    clipped widths, inactive rows) against the brute-force oracle on
+    SHARED uniforms — counts and every committed token must agree."""
+    rng = np.random.default_rng(12345)
+    for _ in range(200):
+        _check_against_oracle(_random_case(rng))
+
+
+def test_rejection_accept_greedy_is_argmax_chain():
+    """Greedy rows emit exactly the target argmax chain: accepted drafts
+    all equal the running argmax and the final token is the argmax at the
+    rejection/bonus position — the algebra behind spec-on/spec-off token
+    identity for ANY draft."""
+    rng = np.random.default_rng(7)
+    dec, dp, dt, _, widths, ua, uf = _random_case(rng, b=8, k=4, v=16)
+    temps = np.zeros(8, np.float32)
+    widths = np.full(8, 5, np.int32)
+    a, out, ne = jax.device_get(rejection_accept(
+        jnp.asarray(dec), jnp.asarray(dp), jnp.asarray(dt),
+        jnp.asarray(temps), jnp.asarray(widths), jnp.asarray(ua),
+        jnp.asarray(uf)))
+    am = np.argmax(dec, -1)  # (B, K+1)
+    for r in range(8):
+        for i in range(int(ne[r])):
+            assert out[r, i] == am[r, i]
+
+
+def test_rejection_accept_distribution_is_target():
+    """Monte-Carlo: with proposals drawn from the draft distribution, the
+    first committed token's empirical law matches the target softmax
+    (total-variation < 2%) even though the draft is very different —
+    the Leviathan exactness guarantee, vectorized."""
+    rng = np.random.default_rng(99)
+    v, k, n = 10, 3, 40000
+    dec_row = rng.normal(size=(k + 1, v)).astype(np.float32)
+    dp_row = rng.dirichlet(np.ones(v) * 0.5, size=k).astype(np.float32)
+    dec = np.broadcast_to(dec_row, (n, k + 1, v))
+    dp = np.broadcast_to(dp_row, (n, k, v))
+    dt = np.stack([rng.choice(v, size=n, p=dp_row[i] / dp_row[i].sum())
+                   for i in range(k)], 1).astype(np.int32)
+    temps = np.ones(n, np.float32)
+    widths = np.full(n, k + 1, np.int32)
+    ua = rng.uniform(size=(n, k)).astype(np.float32)
+    uf = rng.uniform(size=n).astype(np.float32)
+    _, out, ne = jax.device_get(rejection_accept(
+        jnp.asarray(dec), jnp.asarray(dp), jnp.asarray(dt),
+        jnp.asarray(temps), jnp.asarray(widths), jnp.asarray(ua),
+        jnp.asarray(uf)))
+    assert (ne >= 1).all()
+    freq = np.bincount(out[:, 0], minlength=v) / n
+    want = _softmax(dec_row[0].astype(np.float64))
+    assert 0.5 * np.abs(freq - want).sum() < 0.02
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 2**31 - 1),
+           b=st.integers(1, 5), k=st.integers(1, 5), v=st.integers(2, 9))
+    @settings(max_examples=60, deadline=None)
+    def test_rejection_accept_matches_oracle_hypothesis(seed, b, k, v):
+        rng = np.random.default_rng(seed)
+        _check_against_oracle(_random_case(rng, b=b, k=k, v=v))
+
+
+# ---------------------------------------------------------------------------
+# metrics, shims, refusals
+# ---------------------------------------------------------------------------
+
+def test_spec_metrics_counters(served):
+    spec, model, params = served
+    eng = _engine(model, params, n_spec=3, draft=(model, params),
+                  max_seq=128)
+    reqs = eng.serve([Request(prompt=list(p), max_new_tokens=9)
+                      for p in _prompts(spec.vocab, 4, seed=6)])
+    assert all(r.state == "done" for r in reqs)
+    m = eng.metrics
+    assert m.spec_proposed == 3 * m.spec_slot_rounds  # roomy max_seq: w=K+1
+    assert m.spec_accepted == m.spec_proposed  # self-draft
+    assert m.spec_emitted == 4 * m.spec_slot_rounds
+    assert m.spec_rounds <= m.steps
+    assert sum(a for a, _ in m.spec_by_slot.values()) == m.spec_accepted
+    s = m.summary(reqs)
+    assert s["spec_acceptance_rate"] == 1.0
+    assert s["spec_tokens_per_round"] == 4.0
+    assert "spec_by_slot" in s and s["spec_bonus"] == m.spec_slot_rounds
+    # spec off: no speculative section in the summary
+    off = _engine(model, params)
+    offr = off.serve([Request(prompt=[1, 2, 3], max_new_tokens=3)])
+    assert "spec_acceptance_rate" not in off.metrics.summary(offr)
+
+
+def test_batched_sync_flag_is_deprecated(served):
+    spec, model, params = served
+    prompt = [5, 9, 2, 17, 33, 4]
+    with pytest.warns(DeprecationWarning, match="batched_sync"):
+        sd = SpeculativeDecoder(model, params, model, params, n_spec=3,
+                                max_seq=64, temperature=1e-3,
+                                batched_sync=False)
+    out = sd.generate(prompt, 8)
+    assert out == _greedy_reference(model, params, prompt, 8)
+
+
+def test_engine_config_refusals(served, drafted):
+    spec, model, params = served
+    with pytest.raises(ValueError, match="unified"):
+        ServeEngine(model, params,
+                    EngineConfig(max_slots=2, max_seq=64, n_spec=2),
+                    draft_model=model, draft_params=params)
+    with pytest.raises(ValueError, match="draft"):
+        ServeEngine(model, params,
+                    EngineConfig(max_slots=2, max_seq=64, chunk_size=4,
+                                 cache_layout="paged", page_size=8,
+                                 unified=True, n_spec=2))
+    with pytest.raises(ValueError, match="n_spec"):
+        ServeEngine(model, params,
+                    EngineConfig(max_slots=2, max_seq=64, chunk_size=4,
+                                 cache_layout="paged", page_size=8,
+                                 unified=True),
+                    draft_model=model, draft_params=params)
+
+
+def test_sharded_refuses_speculation(served):
+    spec, model, params = served
+    cfg = EngineConfig(max_slots=2, max_seq=64, chunk_size=4,
+                       cache_layout="paged", page_size=8, unified=True,
+                       n_spec=2, tp=2)
+    with pytest.raises(ValueError, match="n_spec"):
+        validate_engine_sharding(spec, cfg)
